@@ -1,0 +1,74 @@
+"""Shared helpers for the benchmark harness (paper-figure reproductions at
+CPU scale on the synthetic corpus)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import (ExpansionConfig, ModelConfig, OptimizerConfig,
+                                ScheduleConfig, TrainConfig)
+from repro.data.synthetic import DataConfig, SyntheticLM, make_eval_batches
+from repro.train import loop
+
+TINY = ModelConfig(name="bench", family="dense", num_layers=4, d_model=64,
+                   num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256,
+                   max_seq_len=64)
+
+
+def run_training(model_cfg=TINY, *, steps=80, source_layers=0, tau=0.5,
+                 init="random", schedule="wsd", optimizer="muon_nsgd",
+                 lr=0.02, seed=0, os_policy="inherit", batch=8, seq=32,
+                 target_layers=None, data_seed=0):
+    target = target_layers or model_cfg.num_layers
+    expansions = ()
+    src = source_layers
+    if tau and tau > 0 and source_layers < target:
+        expansions = (ExpansionConfig(at_frac=tau, target_layers=target,
+                                      init=init, opt_state_policy=os_policy),)
+    else:
+        src = target
+    tcfg = TrainConfig(total_steps=steps, seq_len=seq, global_batch=batch,
+                       source_layers=src, expansions=expansions,
+                       optimizer=OptimizerConfig(name=optimizer,
+                                                 learning_rate=lr),
+                       schedule=ScheduleConfig(name=schedule),
+                       eval_every=10**9, eval_batches=1, log_every=2,
+                       checkpoint_every=10**9, seed=seed)
+    dcfg = DataConfig(vocab_size=model_cfg.vocab_size, seq_len=seq,
+                      global_batch=batch, seed=data_seed)
+    res = loop.train(model_cfg, tcfg, data=SyntheticLM(dcfg),
+                     eval_batches=make_eval_batches(dcfg, 1),
+                     log_fn=lambda *a: None)
+    return res
+
+
+def final_loss(res, k=3):
+    return float(np.mean(res.history["loss"][-k:]))
+
+
+def flops_of(res, model_cfg, seq, batch):
+    """6·N(t)·tokens accumulated over the run (eq 1.1 accounting)."""
+    total = 0.0
+    layers_per_step = {}
+    hist = res.history
+    # reconstruct per-step layers from logged points
+    steps = hist["step"]
+    layers = hist["layers"]
+    for i, s in enumerate(steps):
+        nxt = steps[i + 1] if i + 1 < len(steps) else s + 1
+        cfg = model_cfg.with_depth(layers[i])
+        n = cfg.param_count()
+        total += 6.0 * n * seq * batch * (nxt - s)
+    return total
+
+
+def timed(fn, *args, warmup=1, iters=5):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    import jax
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us

@@ -1,0 +1,244 @@
+"""Benchmark harness — one function per paper table/figure, printed as
+``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+
+Each benchmark reproduces the corresponding paper artifact at CPU scale on
+the deterministic synthetic corpus (DESIGN.md §7 documents the scale
+substitution); the large-scale shapes are covered by the dry-run/roofline
+pipeline, not here.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Fig 3 / Fig 13 / Table 1-2: initialization approaches
+# ---------------------------------------------------------------------------
+
+def bench_expansion_init(fast=False):
+    from benchmarks.common import final_loss, run_training
+    steps = 60 if fast else 120
+    t0 = time.perf_counter()
+    rows = {}
+    for init in ("random", "copying_stack", "zero", "copying_zeroL"):
+        src = 0 if init == "random" else 1
+        res = run_training(steps=steps, source_layers=src, tau=0.3, init=init)
+        rows[init] = final_loss(res)
+    fixed = final_loss(run_training(steps=steps, tau=0))
+    us = (time.perf_counter() - t0) * 1e6 / (len(rows) + 1)
+    for k, v in rows.items():
+        _row(f"expansion_init/{k}", us, f"final_loss={v:.4f}")
+    _row("expansion_init/fixed_size", us, f"final_loss={fixed:.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 5: copying variants for multi-layer expansion
+# ---------------------------------------------------------------------------
+
+def bench_copying_variants(fast=False):
+    from benchmarks.common import final_loss, run_training
+    steps = 60 if fast else 120
+    t0 = time.perf_counter()
+    for init in ("copying_stack", "copying_inter", "copying_last"):
+        res = run_training(steps=steps, source_layers=2, tau=0.3, init=init)
+        us = (time.perf_counter() - t0) * 1e6 / 3
+        _row(f"copying_variant/{init}", us,
+             f"final_loss={final_loss(res):.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 7 / 21: WSD vs cosine across expansion times
+# ---------------------------------------------------------------------------
+
+def bench_schedule_sweep(fast=False):
+    from benchmarks.common import final_loss, run_training
+    steps = 60 if fast else 120
+    taus = (0.2, 0.6) if fast else (0.2, 0.5, 0.7)
+    t0 = time.perf_counter()
+    out = {}
+    for sched in ("wsd", "cosine"):
+        lr = 0.02 if sched == "wsd" else 0.04
+        for tau in taus:
+            res = run_training(steps=steps, tau=tau, schedule=sched, lr=lr)
+            out[(sched, tau)] = final_loss(res)
+    n = len(out)
+    us = (time.perf_counter() - t0) * 1e6 / n
+    for (sched, tau), v in out.items():
+        _row(f"schedule/{sched}_tau{tau}", us, f"final_loss={v:.4f}")
+    late = max(taus)
+    _row("schedule/wsd_minus_cosine_late", us,
+         f"delta={out[('wsd', late)] - out[('cosine', late)]:.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 1 / 10: loss-compute tradeoff
+# ---------------------------------------------------------------------------
+
+def bench_tradeoff(fast=False):
+    from benchmarks.common import TINY, final_loss, flops_of, run_training
+    steps = 80 if fast else 160
+    t0 = time.perf_counter()
+    rows = []
+    for src in (0, 1, 2):
+        res = run_training(steps=steps, source_layers=src, tau=0.6)
+        rows.append((f"src{src}", final_loss(res),
+                     flops_of(res, TINY, 32, 8)))
+    res = run_training(steps=steps, tau=0)
+    rows.append(("fixed", final_loss(res), flops_of(res, TINY, 32, 8)))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    base = rows[-1][2]
+    for name, loss, fl in rows:
+        _row(f"tradeoff/{name}", us,
+             f"final_loss={loss:.4f};flops={fl:.3e};savings={1 - fl / base:.2%}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 17: optimizer-state policies
+# ---------------------------------------------------------------------------
+
+def bench_opt_state_policy(fast=False):
+    from benchmarks.common import final_loss, run_training
+    steps = 60 if fast else 120
+    t0 = time.perf_counter()
+    for pol in ("inherit", "copy", "reset"):
+        res = run_training(steps=steps, source_layers=1, tau=0.1,
+                           init="copying_stack", os_policy=pol)
+        us = (time.perf_counter() - t0) * 1e6 / 3
+        _row(f"opt_state/{pol}", us, f"final_loss={final_loss(res):.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 20: mixing needs data, not iterations
+# ---------------------------------------------------------------------------
+
+def bench_mixing_batchsize(fast=False):
+    from benchmarks.common import final_loss, run_training
+    steps = 80 if fast else 160
+    t0 = time.perf_counter()
+    small = run_training(steps=steps, tau=0.1, batch=8)
+    big = run_training(steps=steps // 4, tau=0.1, batch=32)
+    us = (time.perf_counter() - t0) * 1e6 / 2
+    _row("mixing_batch/b8", us, f"final_loss={final_loss(small):.4f}")
+    _row("mixing_batch/b32_quarter_steps", us,
+         f"final_loss={final_loss(big):.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 4: muP LR transfer across depth
+# ---------------------------------------------------------------------------
+
+def bench_mup_transfer(fast=False):
+    from benchmarks.common import TINY, final_loss, run_training
+    steps = 40 if fast else 80
+    lrs = (0.005, 0.02, 0.08)
+    t0 = time.perf_counter()
+    best = {}
+    for depth in (2, 4):
+        losses = {lr: final_loss(run_training(
+            TINY.with_depth(depth), steps=steps, tau=0, lr=lr))
+            for lr in lrs}
+        best[depth] = min(losses, key=losses.get)
+        for lr, v in losses.items():
+            _row(f"mup/depth{depth}_lr{lr}", 0.0, f"final_loss={v:.4f}")
+    us = (time.perf_counter() - t0) * 1e6 / (len(lrs) * 2)
+    _row("mup/optimal_lr_transfer", us,
+         f"depth2={best[2]};depth4={best[4]};transfer={best[2] == best[4]}")
+
+
+# ---------------------------------------------------------------------------
+# §4 theory: bound terms per schedule
+# ---------------------------------------------------------------------------
+
+def bench_theory(fast=False):
+    import numpy as np
+    from repro.core import theory
+    from repro.core.schedules import cosine, wsd
+    t0 = time.perf_counter()
+    T, tau = 1000, 800
+    for name, fn in (("wsd", wsd(0.01, T)), ("cosine", cosine(0.01, T))):
+        lrs = np.array([float(fn(t)) for t in range(T)])
+        out = theory.progressive_bound(
+            theory.BoundInputs(total_steps=T, tau=tau), lambda t: lrs[t])
+        us = (time.perf_counter() - t0) * 1e6 / 2
+        _row(f"theory/{name}", us,
+             f"gap={out['gap']:.4f};ratio={out['schedule_ratio']:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# kernels: us_per_call (CPU reference-path timing; Pallas validated in tests)
+# ---------------------------------------------------------------------------
+
+def bench_kernels(fast=False):
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import timed
+    from repro.kernels.flash_attention import ref as fa_ref
+    from repro.kernels.newton_schulz import ops as ns_ops
+    from repro.kernels.rwkv6.ref import wkv_ref
+    from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+    B, S, H, hd = 2, 256, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, hd)) for i in range(3))
+    fn = jax.jit(lambda q, k, v: fa_ref.blocked_attention(q, k, v))
+    us = timed(fn, q, k, v)
+    _row("kernel/flash_attention_ref_256", us,
+         f"gflops={4 * B * S * S * H * hd / us / 1e3:.1f}")
+
+    m = jax.random.normal(ks[3], (256, 1024))
+    fn = jax.jit(lambda m: ns_ops.newton_schulz(m))
+    us = timed(fn, m)
+    _row("kernel/newton_schulz_256x1024", us, "steps=5")
+
+    w = jax.nn.sigmoid(jax.random.normal(ks[4], (B, S, H, hd))) * 0.5 + 0.45
+    u = jnp.zeros((H, hd))
+    s0 = jnp.zeros((B, H, hd, hd))
+    fn = jax.jit(lambda r, k, v, w: wkv_ref(r, k, v, w, u, s0)[0])
+    us = timed(fn, q, k, v, w)
+    _row("kernel/rwkv6_wkv_ref_256", us, f"state={H * hd * hd}")
+
+    d, N = 128, 16
+    u2 = jax.random.normal(ks[0], (B, S, d))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, d)))
+    A = -jnp.exp(jax.random.normal(ks[2], (d, N)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    fn = jax.jit(lambda u2, dt, Bm, Cm:
+                 selective_scan_ref(u2, dt, A, Bm, Cm, jnp.ones((d,)))[0])
+    us = timed(fn, u2, dt, Bm, Cm)
+    _row("kernel/mamba_scan_ref_256", us, f"dstate={N}")
+
+
+BENCHES = {
+    "expansion_init": bench_expansion_init,
+    "copying_variants": bench_copying_variants,
+    "schedule_sweep": bench_schedule_sweep,
+    "tradeoff": bench_tradeoff,
+    "opt_state_policy": bench_opt_state_policy,
+    "mixing_batchsize": bench_mixing_batchsize,
+    "mup_transfer": bench_mup_transfer,
+    "theory": bench_theory,
+    "kernels": bench_kernels,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        BENCHES[name](fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Serving example: batched autoregressive decode with a KV cache on an
+assigned architecture (smoke scale), incl. a grown model — demonstrating
+that a progressively-trained checkpoint serves identically to a fixed one.
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch gemma2-9b]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro import configs as cfglib
+from repro.core import expansion as exp
+from repro.models import registry
+from repro.train.serve_lib import Generator
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="gemma2-9b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--gen", type=int, default=24)
+args = ap.parse_args()
+
+cfg = cfglib.get_smoke_config(args.arch)
+api = registry.get_model(cfg)
+
+# a "progressively grown" model: 1 super-block source expanded to full depth
+period = cfg.pattern_period
+src = api.init(jax.random.PRNGKey(0), cfg, num_layers=period)
+params = exp.expand_params(src, cfg.with_depth(period), cfg.num_layers,
+                           "copying_stack")
+print(f"serving {cfg.name}: {cfg.num_layers} layers "
+      f"(grown from {period}), vocab {cfg.vocab_size}")
+
+rng = np.random.default_rng(0)
+prompts = rng.integers(0, cfg.vocab_size, (args.batch, 8)).astype(np.int32)
+gen = Generator(cfg, params, max_len=8 + args.gen + 1)
+t0 = time.perf_counter()
+out = gen.generate(prompts, args.gen, temperature=0.8, seed=1)
+dt = time.perf_counter() - t0
+print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
+      f"({args.batch * args.gen / dt:.1f} tok/s incl. prefill)")
+print("sample:", out.tokens[0].tolist())

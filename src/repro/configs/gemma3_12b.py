@@ -1,0 +1,13 @@
+"""gemma3-12b [dense] — 5:1 local:global attention, 128k context, qk-norm.
+[hf:google/gemma-3-1b-pt; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b", family="dense",
+    num_layers=48, d_model=3840, num_heads=16, num_kv_heads=8,
+    head_dim=256, d_ff=15360, vocab_size=262144,
+    attention="gqa", activation="gelu", norm="rmsnorm", position="rope",
+    rope_theta=1_000_000.0, tie_embeddings=True, qk_norm=True,
+    window_pattern=(1024, 1024, 1024, 1024, 1024, 0),  # 5 local : 1 global
+    max_seq_len=131072,
+)

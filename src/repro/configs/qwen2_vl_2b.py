@@ -1,0 +1,13 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution; vision frontend is a STUB
+(input_specs supplies precomputed patch embeddings).  [arXiv:2409.12191; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b", family="vlm",
+    num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2,
+    head_dim=128, d_ff=8960, vocab_size=151936,
+    attention="gqa", activation="swiglu", norm="rmsnorm", position="mrope",
+    rope_theta=1_000_000.0, tie_embeddings=True,
+    frontend="vision", num_frontend_embeds=256,
+    max_seq_len=32768,
+)

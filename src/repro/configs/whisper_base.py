@@ -1,0 +1,15 @@
+"""whisper-base [audio] — encoder-decoder backbone; the conv audio frontend
+is a STUB (input_specs supplies precomputed frame embeddings).
+[arXiv:2212.04356; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="audio",
+    num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+    head_dim=64, d_ff=2048, vocab_size=51865,
+    attention="mha", activation="gelu", norm="layernorm", position="absolute",
+    tie_embeddings=True,
+    is_encoder_decoder=True, num_encoder_layers=6, encoder_seq_len=1500,
+    frontend="audio",
+    max_seq_len=32768,       # decoder backbone exercised at assigned shapes
+)

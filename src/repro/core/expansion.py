@@ -1,0 +1,225 @@
+"""Depth expansion operators — the paper's primary contribution (§3, §A).
+
+All models stack layers as super-blocks with a leading ``n_super`` pytree
+axis (see ``repro.models.transformer``), so depth expansion for *every*
+architecture (dense, MoE, hybrid, SSM, enc-dec) is one uniform operation on
+that axis.  Supported initializations (paper §3.1/§3.3/§A.2):
+
+  random         new blocks freshly initialized (muP scale)   [feature learning]
+  zero           new blocks all-zero            [function-preserving, untrainable]
+  copying_stack  [1,2,3] -> [1,2,3,1,2,3]
+  copying_inter  [1,2,3] -> [1,1,2,2,3,3]
+  copying_last   [1,2,3] -> [1,2,3,3,3,3]
+  copying_zeroL  copying + zero last linear sub-layer  [function-preserving, trainable]
+  copying_zeroN  copying + zero norm scales            [function-preserving, weak]
+
+`insert_at='bottom'` appends new blocks *after* the old ones ([1..k,R..R]),
+which the paper finds best (§A.3); 'top' prepends.
+
+Expansion runs under jit on the mesh: stacked leaves keep their sharding and
+old buffers are donated, so a 7B expansion is an on-device reshape, not a
+host round-trip.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+COPY_METHODS = ("copying_stack", "copying_inter", "copying_last",
+                "copying_zeroL", "copying_zeroN")
+ALL_METHODS = ("random", "zero") + COPY_METHODS
+
+# Names of "last linear" leaves inside a layer, zeroed by copying_zeroL.
+_LAST_LINEAR_KEYS = ("wo", "w_down", "out_proj", "w_o", "cm_v", "w_b")
+_NORM_SCALE_PATH = ("ln1", "ln2", "ln_x", "scale", "bias")
+
+
+def _source_index_map(n_src: int, n_tgt: int, method: str) -> List[int]:
+    """Which source block seeds each target block (copying variants)."""
+    assert n_src >= 1
+    if method == "copying_last":
+        return list(range(n_src)) + [n_src - 1] * (n_tgt - n_src)
+    if method in ("copying_stack",):
+        return [i % n_src for i in range(n_tgt)]
+    # copying_inter: repeat each source block ~n_tgt/n_src times, remainder
+    # spread over the deepest blocks.
+    base, rem = divmod(n_tgt, n_src)
+    out = []
+    for i in range(n_src):
+        out.extend([i] * (base + (1 if i >= n_src - rem else 0)))
+    return out
+
+
+def _is_new_mask(n_src: int, n_tgt: int, insert_at: str) -> List[bool]:
+    """Target blocks considered 'new' (for zeroing / random init / OS policy).
+    For pure append/prepend layouts only; copy variants define their own."""
+    if insert_at == "top":
+        return [True] * (n_tgt - n_src) + [False] * n_src
+    return [False] * n_src + [True] * (n_tgt - n_src)
+
+
+def _zero_sublayers(block, keys: Tuple[str, ...], norm_mode: bool = False):
+    """Zero selected leaves of one (stacked) block pytree."""
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if norm_mode:
+            # zero norm scale/bias of the residual branches
+            hit = any(p in ("ln1", "ln2", "ln_x") for p in path) and \
+                path[-1] in ("scale", "bias")
+        else:
+            hit = path[-1] in keys
+        return jnp.zeros_like(tree) if hit else tree
+    return walk(block, ())
+
+
+def expand_stack(old_stack, n_tgt: int, method: str,
+                 fresh_stack=None, insert_at: str = "bottom"):
+    """Expand a stacked super-block pytree (leading axis n_src -> n_tgt).
+
+    `old_stack` may be None (zero-layer source: only 'random'/'zero' valid).
+    `fresh_stack` supplies randomly-initialized blocks (leading axis n_tgt)
+    for 'random'; only its new-block slices are used.
+    """
+    n_src = 0 if old_stack is None else jax.tree.leaves(old_stack)[0].shape[0]
+    if n_tgt < n_src:
+        raise ValueError(f"cannot shrink stack {n_src} -> {n_tgt}")
+    if method in COPY_METHODS and n_src == 0:
+        raise ValueError("copying from a zero-layer source is undefined "
+                         "(paper Table 2); use 'random'")
+
+    if method == "random":
+        assert fresh_stack is not None
+        if n_src == 0:
+            return fresh_stack
+        def mix(old, fresh):
+            new_part = fresh[n_src:] if insert_at == "bottom" else fresh[:n_tgt - n_src]
+            parts = [old, new_part] if insert_at == "bottom" else [new_part, old]
+            return jnp.concatenate(parts, axis=0)
+        return jax.tree.map(mix, old_stack, fresh_stack)
+
+    if method == "zero":
+        if n_src == 0:
+            assert fresh_stack is not None
+            return jax.tree.map(jnp.zeros_like, fresh_stack)
+        def mix0(old):
+            z = jnp.zeros((n_tgt - n_src,) + old.shape[1:], old.dtype)
+            parts = [old, z] if insert_at == "bottom" else [z, old]
+            return jnp.concatenate(parts, axis=0)
+        return jax.tree.map(mix0, old_stack)
+
+    # copying family ---------------------------------------------------------
+    base = {"copying_zeroL": "copying_stack",
+            "copying_zeroN": "copying_stack"}.get(method, method)
+    idx = jnp.asarray(_source_index_map(n_src, n_tgt, base))
+    copied = jax.tree.map(lambda x: x[idx], old_stack)
+    if method in ("copying_zeroL", "copying_zeroN"):
+        # zero the chosen sub-layers of the *new* blocks only
+        new_mask = jnp.asarray(
+            [i >= n_src for i in range(n_tgt)]
+            if base != "copying_inter" else
+            [bool(j) for j in _inter_new_flags(n_src, n_tgt)])
+        zeroed = _zero_sublayers(copied, _LAST_LINEAR_KEYS,
+                                 norm_mode=(method == "copying_zeroN"))
+        def sel(z, c):
+            m = new_mask.reshape((-1,) + (1,) * (c.ndim - 1))
+            return jnp.where(m, z, c)
+        copied = jax.tree.map(sel, zeroed, copied)
+    return copied
+
+
+def _inter_new_flags(n_src, n_tgt):
+    seen = set()
+    flags = []
+    for s in _source_index_map(n_src, n_tgt, "copying_inter"):
+        flags.append(s in seen)
+        seen.add(s)
+    return flags
+
+
+# ---------------------------------------------------------------------------
+# Whole-model expansion
+# ---------------------------------------------------------------------------
+
+def expand_params(params, cfg: ModelConfig, target_layers: int, method: str,
+                  key: Optional[jax.Array] = None, insert_at: str = "bottom",
+                  dtype=jnp.float32):
+    """Expand a model's depth.  Non-block params (embed, head, norms) are
+    inherited unchanged — the paper keeps them across expansion."""
+    from repro.models import registry
+    period = cfg.pattern_period
+    if target_layers % period:
+        raise ValueError((target_layers, period))
+    n_tgt = target_layers // period
+
+    fresh = None
+    if method in ("random", "zero"):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        tcfg = cfg.with_depth(target_layers)
+        fresh_params = registry.get_model(tcfg).init(key, tcfg, dtype=dtype)
+        fresh = {k: fresh_params.get(k) for k in ("blocks", "enc_blocks")
+                 if k in fresh_params}
+
+    new_params = dict(params)
+    for stack_key in ("blocks", "enc_blocks"):
+        present = stack_key in params
+        fresh_stack = (fresh or {}).get(stack_key)
+        if not present and fresh_stack is None:
+            continue
+        if stack_key == "enc_blocks" and fresh_stack is not None:
+            # encoder depth scales proportionally; its n_tgt comes from fresh
+            nt = jax.tree.leaves(fresh_stack)[0].shape[0]
+        else:
+            nt = n_tgt
+        new_params[stack_key] = expand_stack(
+            params.get(stack_key), nt, method,
+            fresh_stack=fresh_stack, insert_at=insert_at)
+    return new_params
+
+
+def expand_opt_state(opt_state: dict, params_new, policy: str, method: str,
+                     insert_at: str = "bottom") -> dict:
+    """Expand optimizer state alongside params (paper §C.2).
+
+    Contract: optimizer states (``repro.optim``) are dicts whose params-like
+    trees live under 'm' / 'v'; 'step' and other scalars pass through.
+
+    policy: 'inherit'  old layers keep OS, new layers zero  [E, H, L]->[E, 0xK, L]
+            'copy'     new layers copy their source layer's OS (copying methods)
+            'reset'    all OS zeroed (Gong et al. 2019 style)
+    """
+    def expand_moments(tree):
+        if policy == "reset":
+            return jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                params_new)
+        out = dict(tree)
+        for stack_key in ("blocks", "enc_blocks"):
+            if stack_key not in params_new:
+                continue
+            n_tgt = jax.tree.leaves(params_new[stack_key])[0].shape[0]
+            old = tree.get(stack_key)
+            if old is None:      # zero-layer source: no prior block OS
+                out[stack_key] = jax.tree.map(jnp.zeros_like,
+                                              params_new[stack_key])
+            elif policy == "copy" and method in COPY_METHODS:
+                out[stack_key] = expand_stack(old, n_tgt, method,
+                                              insert_at=insert_at)
+            else:                # inherit: old OS kept, new blocks zero
+                out[stack_key] = expand_stack(old, n_tgt, "zero",
+                                              insert_at=insert_at)
+        return out
+
+    new_state = {}
+    for k, v in opt_state.items():
+        if k in ("m", "v"):
+            new_state[k] = expand_moments(v)
+        elif k == "step":
+            new_state[k] = jnp.zeros_like(v) if policy == "reset" else v
+        else:
+            new_state[k] = v
+    return new_state

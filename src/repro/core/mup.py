@@ -1,0 +1,63 @@
+"""muP / spectral-scaling rules (paper §3.2).
+
+Feature learning requires consistent per-element activation scale across
+layers: for A_{l+1} = A_l W_l this is the spectral condition
+||W_l||_* ~ sqrt(n_out/n_in).  Muon enforces it *dynamically* (orthogonalized
+updates have unit spectral norm, scaled by sqrt(n_out/n_in)); for AdamW/SGD we
+scale per-tensor LRs.  This is what makes the paper's hyperparameter transfer
+work: one LR for the 0/1-layer source and the 60-layer target.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spectral_lr_scale(shape) -> float:
+    """Per-tensor LR multiplier: sqrt(n_out / n_in) for matrices, 1 otherwise.
+
+    (Muon applies this to the orthogonalized update; AdamW-muP divides by
+    fan-in instead — see repro.optim.)
+    """
+    if len(shape) < 2:
+        return 1.0
+    n_in, n_out = shape[-2], shape[-1]
+    return float(jnp.sqrt(jnp.maximum(n_out / n_in, 1e-12)))
+
+
+def spectral_norm_estimate(w: jax.Array, iters: int = 8, key=None) -> jax.Array:
+    """Power-iteration estimate of ||W||_* for 2-D leaves."""
+    if w.ndim < 2:
+        return jnp.linalg.norm(w)
+    m = w.reshape(-1, w.shape[-1]).astype(jnp.float32)
+    v = jnp.ones((m.shape[1],)) / jnp.sqrt(m.shape[1])
+    def body(v, _):
+        u = m @ v
+        u = u / (jnp.linalg.norm(u) + 1e-9)
+        v = m.T @ u
+        nv = jnp.linalg.norm(v)
+        return v / (nv + 1e-9), nv
+    _, sigmas = jax.lax.scan(body, v, None, length=iters)
+    return sigmas[-1]
+
+
+def check_spectral_condition(params, atol_factor: float = 50.0) -> dict:
+    """Audit ||W||_* / sqrt(n_out/n_in) across 2-D leaves — used by tests and
+    the feature-learning diagnostics to confirm expansion preserved muP."""
+    report = {}
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        if leaf.ndim < 2 or leaf.shape[-1] < 2 or leaf.shape[-2] < 2:
+            continue
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        target = spectral_lr_scale(leaf.shape)
+        sigma = float(spectral_norm_estimate(leaf))
+        report[name] = {"sigma": sigma, "target": target,
+                        "ratio": sigma / max(target, 1e-9)}
+    return report
+
+
+def activation_scale_probe(activations: jax.Array) -> jax.Array:
+    """||A||_2 / sqrt(n) — should be ~O(1) and layer-consistent (§3.2)."""
+    a = activations.astype(jnp.float32)
+    return jnp.sqrt(jnp.mean(jnp.square(a), axis=-1)).mean()

@@ -1,0 +1,68 @@
+"""Learning-rate schedules.  The paper's key schedule is WSD
+(warmup–stable–decay): expansion during the *stable* phase makes the mixing
+time insensitive to τ (Takeaway 6), whereas cosine decay starves the grown
+model of learning rate for τ ≥ 0.5T.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ScheduleConfig
+
+
+def wsd(peak_lr: float, total_steps: int, warmup_frac: float = 0.02,
+        decay_frac: float = 0.2, min_lr_frac: float = 0.0) -> Callable:
+    """Warmup-stable-decay: linear warmup, constant plateau, linear decay."""
+    warmup = max(1, int(total_steps * warmup_frac))
+    decay = max(1, int(total_steps * decay_frac))
+    stable_end = total_steps - decay
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (step + 1) / warmup
+        tail = peak_lr * (1.0 - (1.0 - min_lr_frac)
+                          * jnp.clip((step - stable_end) / decay, 0.0, 1.0))
+        return jnp.where(step < warmup, jnp.minimum(warm, peak_lr),
+                         jnp.where(step < stable_end, peak_lr, tail))
+    return fn
+
+
+def cosine(peak_lr: float, total_steps: int, warmup_frac: float = 0.02,
+           min_lr_frac: float = 0.0, **_) -> Callable:
+    warmup = max(1, int(total_steps * warmup_frac))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (step + 1) / warmup
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (min_lr_frac + (1 - min_lr_frac)
+                         * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(step < warmup, jnp.minimum(warm, peak_lr), cos)
+    return fn
+
+
+def constant(peak_lr: float, total_steps: int, warmup_frac: float = 0.02, **_):
+    warmup = max(1, int(total_steps * warmup_frac))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        return jnp.minimum(peak_lr * (step + 1) / warmup, peak_lr)
+    return fn
+
+
+def make_schedule(cfg: ScheduleConfig, peak_lr: float, total_steps: int) -> Callable:
+    builders = {"wsd": wsd, "cosine": cosine, "constant": constant}
+    return builders[cfg.name](peak_lr, total_steps,
+                              warmup_frac=cfg.warmup_frac,
+                              decay_frac=cfg.decay_frac,
+                              min_lr_frac=cfg.min_lr_frac)
+
+
+def stable_phase_end(cfg: ScheduleConfig, total_steps: int) -> int:
+    """Last step of the WSD plateau — the latest admissible expansion time."""
+    if cfg.name == "wsd":
+        return total_steps - max(1, int(total_steps * cfg.decay_frac))
+    return total_steps

@@ -1,0 +1,90 @@
+"""Distributed-optimization helpers: gradient compression with error
+feedback (for the low-bandwidth cross-pod 'pod' axis), plus step-time
+watermark tracking for straggler detection.
+
+XLA SPMD already overlaps collectives with compute via the latency-hiding
+scheduler; these utilities target the DCN-bound pod axis where int8 gradient
+all-reduce halves the dominant communication term.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression + error feedback
+# ---------------------------------------------------------------------------
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_error_feedback(grads):
+    return jax.tree.map(lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads)
+
+
+def compress_grads_with_ef(grads, ef_state):
+    """Quantize grads to int8 with error feedback: e' = (g+e) - deq(q(g+e)).
+
+    Use on the 'pod' DP axis: the all-reduce then moves 4x fewer bytes
+    (int8 vs f32).  Returns (compressed_tree of (q, scale), new_ef_state).
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = compress_int8(corrected)
+        deq = decompress_int8(q, scale)
+        return (q, scale), corrected - deq
+    both = jax.tree.map(one, grads, ef_state,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    comp = jax.tree.map(lambda t: t[0], both,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    new_ef = jax.tree.map(lambda t: t[1], both,
+                          is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    return comp, new_ef
+
+
+def decompress_grads(comp, dtype=jnp.float32):
+    return jax.tree.map(lambda t: decompress_int8(t[0], t[1], dtype), comp,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection (host-side watermarks)
+# ---------------------------------------------------------------------------
+
+class StragglerMonitor:
+    """Tracks per-step wall time; flags steps slower than `threshold` x the
+    rolling median.  On a real cluster the flag triggers the runbook action
+    (drain + hot-spare swap); here it feeds logs/tests."""
+
+    def __init__(self, window: int = 50, threshold: float = 2.0):
+        self.times: Deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self._t0: Optional[float] = None
+        self.flagged = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> Tuple[float, bool]:
+        dt = time.perf_counter() - self._t0
+        slow = False
+        if len(self.times) >= 10:
+            med = sorted(self.times)[len(self.times) // 2]
+            slow = dt > self.threshold * med
+            self.flagged += int(slow)
+        self.times.append(dt)
+        return dt, slow

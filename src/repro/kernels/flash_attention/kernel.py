@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (causal / sliding-window / softcap / GQA).
+
+Grid: (batch, q_heads, q_blocks, k_blocks) — the k axis is innermost and
+sequential; online-softmax statistics (m, l) and the output accumulator live
+in VMEM scratch carried across k iterations.  GQA is handled in the BlockSpec
+index map (q head h reads kv head h // group), so K/V are never repeated in
+HBM.  Sliding-window and causal constraints are applied as in-kernel masks;
+fully-masked blocks are skipped via ``pl.when`` so they cost no MXU work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+          scale: float, causal: bool, window: int, softcap: float,
+          block_q: int, block_k: int, n_k: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qb * block_q
+    k_start = kb * block_k
+
+    # Skip blocks that are entirely masked (above the diagonal, or beyond the
+    # sliding window).  Saves ~2x for causal, more for small windows.
+    oob_causal = causal and (k_start > q_start + block_q - 1)
+    run = jnp.logical_not(
+        jnp.logical_or(
+            jnp.asarray(oob_causal),
+            (window > 0) and (q_start - (k_start + block_k - 1) >= window)))
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        ki = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= qi >= ki
+        if window > 0:
+            mask &= (qi - ki) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q, k, v, *, causal=True, window=0, logit_softcap=0.0,
+                        block_q=256, block_k=256, interpret=False):
+    """q: (B,S,H,hd); k,v: (B,S,KV,hd) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    while S % block_q:
+        block_q //= 2
+    while S % block_k:
+        block_k //= 2
+    n_q, n_k = S // block_q, S // block_k
+    grid = (B, H, n_q, n_k)
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _body, scale=scale, causal=causal, window=window,
+        softcap=logit_softcap, block_q=block_q, block_k=block_k, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32),
+                        pltpu.VMEM((block_q, 1), jnp.float32),
+                        pltpu.VMEM((block_q, 1), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,30 @@
+"""Public flash-attention entry point used by the model zoo.
+
+TPU backend -> Pallas kernel; otherwise the exact blocked-jnp path (same
+online-softmax math, flash-style memory) so CPU tests and dry-run lowering
+stay memory-bounded.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_tpu
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, logit_softcap=0.0,
+                    force: str = "auto"):
+    """q: (B,S,H,hd); k,v: (B,S,KV,hd) -> (B,S,H,hd)."""
+    S = q.shape[1]
+    use_pallas = force == "pallas" or (
+        force == "auto" and jax.default_backend() == "tpu")
+    if use_pallas:
+        return flash_attention_tpu(
+            q, k, v, causal=causal, window=window,
+            logit_softcap=logit_softcap,
+            interpret=jax.default_backend() != "tpu")
+    if S <= 256 and force != "blocked":
+        return ref.naive_attention(q, k, v, causal=causal, window=window,
+                                   logit_softcap=logit_softcap)
+    return ref.blocked_attention(q, k, v, causal=causal, window=window,
+                                 logit_softcap=logit_softcap)

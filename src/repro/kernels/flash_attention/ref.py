@@ -1,0 +1,106 @@
+"""Reference implementations for flash attention.
+
+``naive_attention`` — materializes the full score matrix; the test oracle.
+``blocked_attention`` — exact online-softmax over k-blocks in pure jnp
+(lax.scan); memory-bounded, so it is also the lowering path on non-TPU
+backends (dry-run roofline sees flash-style memory behavior, not an S×S
+temp).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(x, cap):
+    return jnp.where(cap > 0.0, cap * jnp.tanh(x / jnp.maximum(cap, 1e-6)), x)
+
+
+def _expand_kv(k, H):
+    KV = k.shape[2]
+    if KV == H:
+        return k
+    return jnp.repeat(k, H // KV, axis=2)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, logit_softcap=0.0):
+    """q: (B,S,H,hd); k,v: (B,S,KV,hd).  Exact, O(S^2) memory."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd)
+    if logit_softcap > 0:
+        scores = _softcap(scores, logit_softcap)
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= (qi - ki) < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "logit_softcap", "block_k"))
+def blocked_attention(q, k, v, *, causal=True, window=0, logit_softcap=0.0,
+                      block_k=512):
+    """Exact online-softmax attention, scanning k/v in blocks of `block_k`.
+
+    Peak temp is O(B·H·S·block_k) instead of O(B·H·S²).
+    """
+    B, S, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    block_k = min(block_k, Sk)
+    pad = (-Sk) % block_k
+    if pad:                                          # ragged kv length
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_blocks = (Sk + pad) // block_k
+
+    qf = q.astype(jnp.float32) / jnp.sqrt(hd)
+    kb = k.astype(jnp.float32).reshape(B, n_blocks, block_k, KV, hd)
+    vb = v.astype(jnp.float32).reshape(B, n_blocks, block_k, KV, hd)
+    kb = jnp.moveaxis(kb, 1, 0)                     # (n, B, bk, KV, hd)
+    vb = jnp.moveaxis(vb, 1, 0)
+    qg = qf.reshape(B, S, KV, G, hd)
+
+    qi = jnp.arange(S)
+    acc0 = jnp.zeros((B, S, KV, G, hd), jnp.float32)
+    m0 = jnp.full((B, S, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), jnp.float32)
+
+    def body(carry, xs):
+        acc, m, l, blk = carry
+        kblk, vblk = xs
+        ki = blk * block_k + jnp.arange(block_k)
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qg, kblk)       # (B,S,KV,G,bk)
+        if logit_softcap > 0:
+            s = _softcap(s, logit_softcap)
+        mask = jnp.broadcast_to(ki[None, :] < Sk, (S, block_k))
+        if causal:
+            mask &= qi[:, None] >= ki[None, :]
+        if window > 0:
+            mask &= (qi[:, None] - ki[None, :]) < window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bqkgc,bckh->bqkgh", p, vblk)
+        return (acc, m_new, l, blk + 1), None
+
+    (acc, m, l, _), _ = jax.lax.scan(body, (acc0, m0, l0, 0), (kb, vb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, S, H, hd).astype(q.dtype)

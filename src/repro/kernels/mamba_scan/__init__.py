@@ -1,0 +1,1 @@
+from repro.kernels.mamba_scan import ops  # noqa: F401

@@ -1,0 +1,25 @@
+"""Public selective-scan entry point (Mamba blocks)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import selective_scan_tpu
+from repro.kernels.mamba_scan.ref import (selective_scan_chunked,
+                                          selective_scan_ref)
+
+
+def selective_scan(u, dt, A, Bm, Cm, Dp, *, force: str = "auto"):
+    """Returns y: (B, S, d_inner).
+
+    Non-TPU path uses the exact chunked form for S >= 64 (§Perf h1) —
+    per-step scans save O(S) states for the backward pass."""
+    use_pallas = force == "pallas" or (
+        force == "auto" and jax.default_backend() == "tpu")
+    if use_pallas:
+        return selective_scan_tpu(u, dt, A, Bm, Cm, Dp,
+                                  interpret=jax.default_backend() != "tpu")
+    if force == "scan" or u.shape[1] < 64:
+        y, _ = selective_scan_ref(u, dt, A, Bm, Cm, Dp)
+        return y
+    y, _ = selective_scan_chunked(u, dt, A, Bm, Cm, Dp)
+    return y

@@ -1,0 +1,1 @@
+from repro.kernels.newton_schulz import ops  # noqa: F401

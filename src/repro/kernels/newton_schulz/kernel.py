@@ -1,0 +1,97 @@
+"""Pallas TPU kernels for Muon's Newton–Schulz orthogonalization.
+
+Two paths:
+
+  * ``ns_fused_kernel`` — the whole matrix resides in VMEM; all 5 quintic
+    iterations run inside one kernel (zero HBM round-trips between
+    iterations).  Valid whenever the matrix + its (n×n) Gram fit in VMEM —
+    true for every per-layer matrix at paper scale (e.g. GPT2 768×3072 f32 =
+    9.4 MiB, Gram 2.3 MiB).  The inner dots hit the MXU; n is padded to a
+    multiple of 128 by the caller.
+
+  * ``matmul_kernel`` — classic tiled (bm×bk)·(bk×bn) matmul with f32 VMEM
+    accumulator, used to compose NS iterations for matrices too large to fuse
+    (e.g. 7168×20480 FFN weights).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.newton_schulz.ref import NS_COEFFS
+
+
+# ---------------------------------------------------------------------------
+# Fused small-matrix NS
+# ---------------------------------------------------------------------------
+
+def _ns_fused_body(x_ref, o_ref, *, steps: int, eps: float):
+    a, b, c = NS_COEFFS
+    x = x_ref[...].astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(x * x)) + eps
+    x = x / norm
+
+    def one(_, x):
+        gram = jnp.dot(x, x.T, preferred_element_type=jnp.float32)
+        poly = b * gram + c * jnp.dot(gram, gram,
+                                      preferred_element_type=jnp.float32)
+        return a * x + jnp.dot(poly, x, preferred_element_type=jnp.float32)
+
+    x = jax.lax.fori_loop(0, steps, one, x)
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+def ns_fused(x: jax.Array, steps: int = 5, eps: float = 1e-7,
+             interpret: bool = False) -> jax.Array:
+    """x: (n, m) with n <= m, both multiples of 8; whole-matrix VMEM kernel."""
+    n, m = x.shape
+    return pl.pallas_call(
+        functools.partial(_ns_fused_body, steps=steps, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        in_specs=[pl.BlockSpec((n, m), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((n, m), lambda: (0, 0)),
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# Tiled matmul (building block for the large-matrix NS path)
+# ---------------------------------------------------------------------------
+
+def _matmul_body(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                            y_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 256, bk: int = 512,
+           bn: int = 256, interpret: bool = False) -> jax.Array:
+    """Tiled (M,K)@(K,N) with f32 accumulation.  Dims must divide the tiles
+    (callers pad); tiles are MXU-aligned multiples of 128."""
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_body, n_k=grid[2]),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the Muon Newton–Schulz orthogonalization."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Quintic iteration coefficients (Jordan et al., 2024).
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+
+
+def newton_schulz_ref(m: jnp.ndarray, steps: int = 5) -> jnp.ndarray:
+    """Orthogonalize a single matrix: singular values -> ~1.
+
+    Works on (n, m) with any aspect; computed in f32.
+    """
+    a, b, c = NS_COEFFS
+    x = m.astype(jnp.float32)
+    transpose = x.shape[0] > x.shape[1]
+    if transpose:
+        x = x.T
+    x = x / (jnp.linalg.norm(x) + 1e-7)
+    for _ in range(steps):
+        gram = x @ x.T
+        x = a * x + (b * gram + c * (gram @ gram)) @ x
+    if transpose:
+        x = x.T
+    return x.astype(m.dtype)

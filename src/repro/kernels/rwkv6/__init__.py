@@ -1,0 +1,1 @@
+from repro.kernels.rwkv6 import ops  # noqa: F401

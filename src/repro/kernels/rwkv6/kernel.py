@@ -1,0 +1,109 @@
+"""Pallas TPU kernel for the RWKV6 WKV recurrence — chunked block-parallel
+form (TPU adaptation of the GPU per-thread recurrence).
+
+Within a chunk of length C the recurrence is closed-form:
+
+    y_t   = r_t ⊙ exp(cum_{t-1}) · S_0  +  Σ_{s<t} (r_t ⊙ exp(cum_{t-1}−cum_s)) · k_s v_s
+            + (r_t ⊙ u) · k_t v_t
+    S_C   = diag(exp(cum_C)) S_0 + Σ_s diag(exp(cum_C − cum_s)) k_s v_s
+
+with cum_t = Σ_{s≤t} log w_s (all negative, so every exp ≤ 1 — numerically
+safe).  Intra-chunk terms are dense (C×C×hd) contractions on the MXU; the
+inter-chunk state (hd×hd f32) is carried in VMEM scratch across the
+sequential chunk grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _body(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_out_ref,
+          state_ref, *, chunk: int, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)                 # (C, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                 # (1, hd) -> (hd,)
+    S0 = state_ref[...]                              # (hd, hd)
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))            # (C, hd), <= 0
+    cum = jnp.cumsum(logw, axis=0)                   # inclusive
+    cum_prev = cum - logw                            # cum_{t-1}
+
+    # inter-chunk contribution: (r_t ⊙ exp(cum_{t-1})) @ S0
+    y = jax.lax.dot(r * jnp.exp(cum_prev), S0,
+                    preferred_element_type=jnp.float32)   # (C, hd_v)
+
+    # intra-chunk, strictly-lower-triangular part
+    decay = jnp.exp(cum_prev[:, None, :] - cum[None, :, :])   # (t, s, hd)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = (t_idx > s_idx).astype(jnp.float32)
+    att = jnp.einsum("tk,tsk,sk->ts", r, decay, k) * tri
+    # diagonal (current-token bonus u)
+    diag = jnp.sum(r * u * k, axis=-1)
+    att = att + jnp.diag(diag)
+    y = y + jax.lax.dot(att, v, preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update to end of chunk
+    carry_decay = jnp.exp(cum[-1][None, :] - cum)    # (C, hd)
+    S_new = S0 * jnp.exp(cum[-1])[:, None] + \
+        jax.lax.dot((k * carry_decay).T, v, preferred_element_type=jnp.float32)
+    state_ref[...] = S_new
+
+    @pl.when(c == n_chunks - 1)
+    def _():
+        s_out_ref[0] = S_new
+
+
+def wkv_tpu(r, k, v, w, u, state, *, chunk=128, interpret=False):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd) f32."""
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+
+    # flatten (B,H) into one grid axis
+    def flat(x):
+        return jnp.moveaxis(x, 2, 1).reshape(B * H, S, hd)
+    rf, kf, vf, wf = map(flat, (r, k, v, w))
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+    s0 = state.reshape(B * H, hd, hd).astype(jnp.float32)
+
+    grid = (B * H, n_chunks)
+    y, s_out = pl.pallas_call(
+        functools.partial(_body, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, 1, hd), lambda g, c: (g, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda g, c: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, hd, hd), lambda g, c: (g, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B * H, S, hd), r.dtype),
+                   jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, s0)
+
+    y = jnp.moveaxis(y.reshape(B, H, S, hd), 1, 2)
+    return y, s_out.reshape(B, H, hd, hd)

@@ -1,0 +1,23 @@
+"""Public WKV entry point (RWKV6 time mixing)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6.kernel import wkv_tpu
+from repro.kernels.rwkv6.ref import wkv_chunked, wkv_ref
+
+
+def wkv(r, k, v, w, u, state, *, force: str = "auto"):
+    """Returns (y (B,S,H,hd), final_state (B,H,hd,hd)).
+
+    Non-TPU path uses the exact chunked closed form for S >= 64 (§Perf h1:
+    per-step scan saves O(S) states on the backward pass; chunking cuts the
+    memory roofline term by ~chunk x), per-step scan for short sequences."""
+    use_pallas = force == "pallas" or (
+        force == "auto" and jax.default_backend() == "tpu")
+    if use_pallas:
+        return wkv_tpu(r, k, v, w, u, state,
+                       interpret=jax.default_backend() != "tpu")
+    if force == "scan" or r.shape[1] < 64:
+        return wkv_ref(r, k, v, w, u, state)
+    return wkv_chunked(r, k, v, w, u, state)

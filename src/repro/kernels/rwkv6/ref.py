@@ -1,0 +1,85 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+
+r,k,v,w: (B,S,H,hd);  u: (H,hd);  state: (B,H,hd,hd) [key x value].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def wkv_ref(r, k, v, w, u, state):
+    B, S, H, hd = r.shape
+    rf = jnp.moveaxis(r, 1, 0).astype(jnp.float32)   # (S,B,H,hd)
+    kf = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+    vf = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    wf = jnp.moveaxis(w, 1, 0).astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S_prev, x):
+        r_t, k_t, v_t, w_t = x                        # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]    # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       S_prev + uf[None, :, :, None] * kv)
+        S_new = S_prev * w_t[..., :, None] + kv
+        return S_new, y
+
+    state_f, ys = jax.lax.scan(step, state.astype(jnp.float32),
+                               (rf, kf, vf, wf))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), state_f
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 64):
+    """Exact chunked closed form (same math as the Pallas kernel, §Perf h1).
+
+    The per-step scan saves an (B,H,hd,hd) state for EVERY time step on the
+    backward pass (O(S) state traffic); this form scans S/chunk chunks with
+    dense intra-chunk contractions, cutting saved-state traffic by `chunk`x
+    and turning the work MXU-shaped.  Numerically safe: all exps are of
+    non-positive numbers.
+    """
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+
+    def to_chunks(x):
+        xf = x.astype(jnp.float32).reshape(B, n, chunk, H, hd)
+        return jnp.moveaxis(xf, 1, 0)                    # (n,B,chunk,H,hd)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+
+    def per_chunk(S0, xs):
+        rt, kt, vt, wt = xs                              # (B,chunk,H,hd)
+        logw = jnp.log(jnp.maximum(wt, 1e-30))
+        cum = jnp.cumsum(logw, axis=1)                   # inclusive over time
+        cum_prev = cum - logw
+        # inter-chunk: y_t += (r_t ⊙ W_{t-1}) · S0
+        y = jnp.einsum("bthk,bhkv->bthv", rt * jnp.exp(cum_prev), S0)
+        # intra-chunk strictly-lower part + u-diagonal
+        decay = jnp.exp(cum_prev[:, :, None] - cum[:, None, :])  # (B,t,s,H,hd)
+        att = jnp.einsum("bthk,btshk,bshk->bhts", rt, decay, kt)
+        att = att * tri[None, None]
+        diag = jnp.einsum("bthk,bthk->bth", rt * uf[None, None], kt)
+        att = att + jnp.einsum("bth,ts->bhts", diag,
+                               jnp.eye(chunk, dtype=jnp.float32))
+        y = y + jnp.einsum("bhts,bshv->bthv", att, vt)
+        carry = jnp.exp(cum[:, -1][:, None] - cum)       # (B,chunk,H,hd)
+        S_new = S0 * jnp.exp(cum[:, -1])[..., :, None] + \
+            jnp.einsum("bshk,bshv->bhkv", kt * carry, vt)
+        return S_new, y
+
+    Sf, ys = jax.lax.scan(per_chunk, state.astype(jnp.float32),
+                          (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    return y.astype(r.dtype), Sf

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state.  Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2x16x16 =
+512 chips with a leading 'pod' pure-DP axis (gradient all-reduce over DCN).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU smoke runs (same code path as prod)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,79 @@
+"""Training CLI.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch gpt2-12l --source-layers 1 --tau 0.8 --init random \
+        --steps 1000 --seq-len 256 --batch 16 --schedule wsd \
+        --optimizer muon_nsgd --lr 0.01 --ckpt-dir /tmp/run1
+
+Runs the paper's progressive recipe end-to-end on the selected architecture
+(reduced sizes run on CPU; production meshes take the same code path via
+--mesh prod on a TPU slice)."""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro import configs as cfglib
+from repro.configs.base import (ExpansionConfig, OptimizerConfig,
+                                ScheduleConfig, TrainConfig)
+from repro.train import loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-12l")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config for --arch")
+    ap.add_argument("--source-layers", type=int, default=1)
+    ap.add_argument("--tau", type=float, default=0.8,
+                    help="expansion point as fraction of total steps; "
+                    "<=0 disables expansion (fixed-size training)")
+    ap.add_argument("--init", default="random",
+                    choices=["random", "zero", "copying_stack",
+                             "copying_inter", "copying_last",
+                             "copying_zeroL", "copying_zeroN"])
+    ap.add_argument("--os-policy", default="inherit",
+                    choices=["inherit", "copy", "reset"])
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--schedule", default="wsd", choices=["wsd", "cosine",
+                                                          "constant"])
+    ap.add_argument("--optimizer", default="muon_nsgd",
+                    choices=["muon_nsgd", "adamw", "nsgd", "sgd"])
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--history-out", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--remat", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
+           else cfglib.get_config(args.arch))
+    period = cfg.pattern_period
+    src = args.source_layers - args.source_layers % period \
+        if args.source_layers >= period else 0
+    expansions = ()
+    if args.tau > 0:
+        expansions = (ExpansionConfig(at_frac=args.tau,
+                                      target_layers=cfg.num_layers,
+                                      init=args.init,
+                                      opt_state_policy=args.os_policy),)
+    else:
+        src = cfg.num_layers
+    tcfg = TrainConfig(
+        total_steps=args.steps, seq_len=args.seq_len, global_batch=args.batch,
+        source_layers=src, expansions=expansions,
+        optimizer=OptimizerConfig(name=args.optimizer, learning_rate=args.lr),
+        schedule=ScheduleConfig(name=args.schedule),
+        seed=args.seed, remat=args.remat)
+    res = loop.train(cfg, tcfg, checkpoint_dir=args.ckpt_dir)
+    print(f"final loss: {res.history['loss'][-1]:.4f} "
+          f"(layers {res.final_layers})")
+    if args.history_out:
+        with open(args.history_out, "w") as f:
+            json.dump(res.history, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Attention layers: MHA / GQA / MLA, sliding-window, logit softcap, KV cache.
+
+Full-sequence attention routes through ``repro.kernels.flash_attention.ops``
+(Pallas on TPU, jnp reference elsewhere).  Decode uses a fused einsum path
+against a preallocated KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (apply_norm, apply_rope, apply_mrope,
+                                 dense_init, maybe_shard, norm_init, softcap)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    D, Q, KV = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+        r = cfg.mla_kv_lora_rank
+        p = {
+            "wq": dense_init(ks[0], D, Q, dtype),
+            "wkv_a": dense_init(ks[1], D, r, dtype),
+            "wkv_b": dense_init(ks[2], r, 2 * KV, dtype),
+            "wo": dense_init(ks[3], Q, D, dtype),
+        }
+    else:
+        p = {
+            "wq": dense_init(ks[0], D, Q, dtype),
+            "wk": dense_init(ks[1], D, KV, dtype),
+            "wv": dense_init(ks[2], D, KV, dtype),
+            "wo": dense_init(ks[3], Q, D, dtype),
+        }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(cfg.head_dim, "rmsnorm")
+        p["k_norm"] = norm_init(cfg.head_dim, "rmsnorm")
+    return p
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+                  window: int = 0):
+    """Per-layer KV cache pytree.  `window > 0` caps the cache to the sliding
+    window (Gemma local layers) — a large memory win at 500k context."""
+    S = min(max_len, window) if window > 0 else max_len
+    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+        return {"latent": jnp.zeros((batch, S, cfg.mla_kv_lora_rank), dtype)}
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, S, kvh, hd), dtype),
+            "v": jnp.zeros((batch, S, kvh, hd), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _project_qkv(p, cfg: ModelConfig, x):
+    """Returns q,k,v of shapes (B,S,H,hd) / (B,S,KV,hd)."""
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(x @ p["wq"], H, hd)
+    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+        latent = x @ p["wkv_a"]
+        kv = latent @ p["wkv_b"]
+        k, v = jnp.split(kv, 2, axis=-1)
+        k = _split_heads(k, KVH, hd)
+        v = _split_heads(v, KVH, hd)
+        return q, k, v, latent
+    k = _split_heads(x @ p["wk"], KVH, hd)
+    v = _split_heads(x @ p["wv"], KVH, hd)
+    return q, k, v, None
+
+
+def _qk_norm(p, cfg, q, k):
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    return q, k
+
+
+def _position_encode(cfg: ModelConfig, q, k, positions):
+    if cfg.position in ("rope",):
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.position == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    # 'absolute' handled at the embedding layer; 'none' is a no-op.
+    return q, k
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attn_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+               window: int, causal: bool = True) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    from repro.kernels.flash_attention import ops as fa_ops
+    q, k, v, _ = _project_qkv(p, cfg, x)
+    q, k = _qk_norm(p, cfg, q, k)
+    q, k = _position_encode(cfg, q, k, positions)
+    q = maybe_shard(q, P(("pod", "data"), None, "model", None))
+    k = maybe_shard(k, P(("pod", "data"), None, "model", None))
+    v = maybe_shard(v, P(("pod", "data"), None, "model", None))
+    out = fa_ops.flash_attention(
+        q, k, v, causal=causal, window=window,
+        logit_softcap=cfg.attn_logit_softcap)
+    out = out.reshape(out.shape[:2] + (cfg.q_dim,))
+    out = out @ p["wo"]
+    return maybe_shard(out, P(("pod", "data"), "model", None))
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def attn_decode(p, cfg: ModelConfig, x: jax.Array, cache, cache_index: jax.Array,
+                positions: jax.Array, window: int) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, D); cache per `init_kv_cache`; cache_index: () int32 — number
+    of tokens already in the cache.  Returns (out (B,1,D), new_cache)."""
+    B = x.shape[0]
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k_new, v_new, latent = _project_qkv(p, cfg, x)
+    q, k_new = _qk_norm(p, cfg, q, k_new)
+    q, k_new = _position_encode(cfg, q, k_new, positions)
+
+    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+        S = cache["latent"].shape[1]
+        slot = cache_index % S if window > 0 else cache_index
+        lat = jax.lax.dynamic_update_slice(cache["latent"],
+                                           latent.astype(cache["latent"].dtype),
+                                           (0, slot, 0))
+        new_cache = {"latent": lat}
+        kv = lat.astype(x.dtype) @ p["wkv_b"]
+        k, v = jnp.split(kv, 2, axis=-1)
+        k = _split_heads(k, KVH, hd)
+        v = _split_heads(v, KVH, hd)
+        # The cache stores PRE-RoPE latents (that's MLA's memory win); keys
+        # re-derived from it must be rotated at their absolute positions.
+        if cfg.position == "rope":
+            k = apply_rope(k, jnp.arange(S)[None, :], cfg.rope_theta)
+    else:
+        S = cache["k"].shape[1]
+        slot = cache_index % S if window > 0 else cache_index
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                         (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                         (0, slot, 0, 0))
+        new_cache = {"k": k, "v": v}
+        k = k.astype(x.dtype)
+        v = v.astype(x.dtype)
+
+    # Validity mask over cache slots.
+    slots = jnp.arange(S)
+    if window > 0:
+        valid = slots <= jnp.minimum(cache_index, S - 1)  # ring buffer fill
+    else:
+        valid = slots <= cache_index
+
+    # Grouped-query attention: fold groups into the head dim of q.
+    G = H // KVH
+    qg = q.reshape(B, 1, KVH, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / jnp.sqrt(hd).astype(x.dtype)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v).reshape(B, 1, cfg.q_dim)
+    out = out @ p["wo"]
+    return out, new_cache

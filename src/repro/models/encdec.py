@@ -1,0 +1,177 @@
+"""Encoder-decoder transformer (Whisper backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, T_enc, d_model).  Encoder layers are
+bidirectional; decoder layers are causal self-attention + cross-attention.
+Both stacks are scan-stacked super-blocks, so progressive depth expansion
+applies to encoder and decoder jointly.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import (apply_norm, cross_entropy, dense_init,
+                                 embed_init, maybe_shard, norm_init,
+                                 sinusoidal_positions)
+
+
+def _enc_layer_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": norm_init(cfg.d_model, cfg.norm),
+            "attn": attn.attn_init(ks[0], cfg, dtype),
+            "ln2": norm_init(cfg.d_model, cfg.norm),
+            "mlp": mlp_mod.mlp_init(ks[1], cfg, dtype)}
+
+
+def _dec_layer_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    return {"ln1": norm_init(cfg.d_model, cfg.norm),
+            "self_attn": attn.attn_init(ks[0], cfg, dtype),
+            "ln_x": norm_init(cfg.d_model, cfg.norm),
+            "cross_attn": attn.attn_init(ks[1], cfg, dtype),
+            "ln2": norm_init(cfg.d_model, cfg.norm),
+            "mlp": mlp_mod.mlp_init(ks[2], cfg, dtype)}
+
+
+def encdec_init(key, cfg: ModelConfig, dtype=jnp.float32, num_layers=None):
+    """`num_layers` is the *decoder* depth; encoder depth scales with it
+    (num_encoder_layers * L / cfg.num_layers, min 0)."""
+    L = cfg.num_layers if num_layers is None else num_layers
+    Le = cfg.num_encoder_layers * L // max(cfg.num_layers, 1)
+    ks = jax.random.split(key, L + Le + 4)
+    params = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "pos_embed": (jax.random.normal(ks[1], (cfg.max_seq_len, cfg.d_model))
+                      * 0.01).astype(dtype),
+        "enc_pos": sinusoidal_positions(cfg.encoder_seq_len, cfg.d_model).astype(dtype),
+        "enc_final_norm": norm_init(cfg.d_model, cfg.norm),
+        "final_norm": norm_init(cfg.d_model, cfg.norm),
+    }
+    if Le > 0:
+        enc = [_enc_layer_init(ks[2 + i], cfg, dtype) for i in range(Le)]
+        params["enc_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+    if L > 0:
+        dec = [_dec_layer_init(ks[2 + Le + i], cfg, dtype) for i in range(L)]
+        params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *dec)
+    return params
+
+
+def _cross_attend(p, cfg: ModelConfig, x, enc_out):
+    """Decoder-to-encoder attention (full, non-causal)."""
+    from repro.kernels.flash_attention import ops as fa_ops
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(x.shape[:2] + (H, hd))
+    k = (enc_out @ p["wk"]).reshape(enc_out.shape[:2] + (KVH, hd))
+    v = (enc_out @ p["wv"]).reshape(enc_out.shape[:2] + (KVH, hd))
+    out = fa_ops.flash_attention(q, k, v, causal=False, window=0)
+    return out.reshape(x.shape[:2] + (cfg.q_dim,)) @ p["wo"]
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, T_enc, D) stub frontend embeddings -> encoder output."""
+    T = frames.shape[1]
+    x = frames + params["enc_pos"][:T]
+    x = maybe_shard(x, P(("pod", "data"), "model", None))
+    if "enc_blocks" in params:
+        def body(x, lp):
+            h = apply_norm(lp["ln1"], x, cfg.norm)
+            x = x + attn.attn_apply(lp["attn"], cfg, h,
+                                    jnp.arange(T)[None, :], window=0,
+                                    causal=False)
+            h = apply_norm(lp["ln2"], x, cfg.norm)
+            x = x + mlp_mod.mlp_apply(lp["mlp"], cfg, h)
+            return x, None
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(params["enc_final_norm"], x, cfg.norm)
+
+
+def encdec_apply(params, cfg: ModelConfig, tokens, frames,
+                 remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B, S); frames: (B, T_enc, D).  Returns (logits, aux=0)."""
+    enc_out = encode(params, cfg, frames)
+    B, S = tokens.shape
+    x = params["embed"][tokens] + params["pos_embed"][:S]
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        x = x + attn.attn_apply(lp["self_attn"], cfg, h, positions, window=0)
+        h = apply_norm(lp["ln_x"], x, cfg.norm)
+        x = x + _cross_attend(lp["cross_attn"], cfg, h, enc_out)
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        x = x + mlp_mod.mlp_apply(lp["mlp"], cfg, h)
+        return x, None
+
+    if "blocks" in params:
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = x @ params["embed"].T          # whisper ties output to embedding
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def encdec_loss(params, cfg: ModelConfig, tokens, labels, frames, mask=None,
+                remat: bool = False):
+    logits, aux = encdec_apply(params, cfg, tokens, frames, remat=remat)
+    loss = cross_entropy(logits, labels, mask)
+    return loss, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def encdec_init_cache(params, cfg: ModelConfig, batch: int, max_len: int,
+                      enc_out: jax.Array, dtype=jnp.bfloat16):
+    """Self-attn KV caches + per-layer precomputed cross K/V."""
+    if "blocks" not in params:
+        return {}
+    KVH, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def per_layer(lp):
+        ca = lp["cross_attn"]
+        k = (enc_out @ ca["wk"]).reshape(enc_out.shape[:2] + (KVH, hd))
+        v = (enc_out @ ca["wv"]).reshape(enc_out.shape[:2] + (KVH, hd))
+        return {"self": attn.init_kv_cache(cfg, batch, max_len, dtype),
+                "cross_k": k.astype(dtype), "cross_v": v.astype(dtype)}
+
+    return jax.vmap(per_layer)(params["blocks"])
+
+
+def encdec_decode_step(params, cfg: ModelConfig, tokens, cache, index):
+    B = tokens.shape[0]
+    x = params["embed"][tokens] + params["pos_embed"][index][None, None, :]
+    positions = jnp.full((B, 1), index)
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def scan_fn(x, lp_cache):
+        lp, c = lp_cache
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        y, new_self = attn.attn_decode(lp["self_attn"], cfg, h, c["self"],
+                                       index, positions, window=0)
+        x = x + y
+        h = apply_norm(lp["ln_x"], x, cfg.norm)
+        ca = lp["cross_attn"]
+        q = (h @ ca["wq"]).reshape(B, 1, H, hd)
+        G = H // KVH
+        qg = q.reshape(B, 1, KVH, G, hd)
+        k, v = c["cross_k"].astype(x.dtype), c["cross_v"].astype(x.dtype)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / jnp.sqrt(hd).astype(x.dtype)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+        y = jnp.einsum("bkgqs,bskh->bqkgh", probs, v).reshape(B, 1, cfg.q_dim)
+        x = x + y @ ca["wo"]
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        x = x + mlp_mod.mlp_apply(lp["mlp"], cfg, h)
+        return x, {**c, "self": new_self}
+
+    if "blocks" in params:
+        x, cache = jax.lax.scan(scan_fn, x, (params["blocks"], cache))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x @ params["embed"].T, cache

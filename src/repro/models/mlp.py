@@ -1,0 +1,156 @@
+"""Feed-forward layers: dense (GeLU / SwiGLU) and Mixture-of-Experts.
+
+The MoE uses a capacity-based, sort-free-of-dynamic-shapes dispatch (GShard
+style, grouped per data shard like MaxText) so that:
+  * every shape is static (scan/jit friendly),
+  * compute is proportional to top_k (honest MoE FLOPs, not dense-all-experts),
+  * expert weights shard over the 'model' mesh axis (expert parallelism) and
+    tokens shard over ('pod','data').
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.common import activate, dense_init, maybe_shard
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, dtype=jnp.float32, d_ff: Optional[int] = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {"w_gate": dense_init(ks[0], D, F, dtype),
+                "w_up": dense_init(ks[1], D, F, dtype),
+                "w_down": dense_init(ks[2], F, D, dtype)}
+    return {"w_up": dense_init(ks[0], D, F, dtype),
+            "w_down": dense_init(ks[1], F, D, dtype)}
+
+
+def mlp_apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = activate(x @ p["w_up"], "gelu")
+    h = maybe_shard(h, P(("pod", "data"), None, "model"))
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    D = cfg.d_model
+    ef = m.expert_ffn_dim or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    E = m.num_experts
+
+    def expert_stack(k, i, o):
+        kk = jax.random.split(k, E)
+        return jnp.stack([dense_init(kk[e], i, o, dtype) for e in range(E)])
+
+    p = {"router": dense_init(ks[0], D, E, dtype),
+         "w_gate": expert_stack(ks[1], D, ef),
+         "w_up": expert_stack(ks[2], D, ef),
+         "w_down": expert_stack(ks[3], ef, D)}
+    if m.num_shared_experts:
+        sub = jax.random.split(ks[4], 3)
+        sf = ef * m.num_shared_experts
+        p["shared"] = {"w_gate": dense_init(sub[0], D, sf, dtype),
+                       "w_up": dense_init(sub[1], D, sf, dtype),
+                       "w_down": dense_init(sub[2], sf, D, dtype)}
+    return p
+
+
+def _capacity(tokens_per_group: int, m: MoEConfig) -> int:
+    c = int(tokens_per_group * m.top_k * m.capacity_factor / m.num_experts)
+    return max(4, c)
+
+
+def moe_apply(p, cfg: ModelConfig, x: jax.Array,
+              num_groups: int = 0) -> Tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (y, aux) with aux = {'aux_loss', 'router_zloss'}.
+
+    Tokens are processed in `num_groups` independent dispatch groups (the
+    group dim maps onto the 'data' mesh axis; capacity is per-group).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    if num_groups <= 0:
+        num_groups = min(16, B) if B * S >= 16 else 1
+    while T % num_groups:
+        num_groups //= 2
+    num_groups = max(1, num_groups)
+    Tg = T // num_groups
+    C = _capacity(Tg, m)
+    E, K = m.num_experts, m.top_k
+
+    xf = x.reshape(num_groups, Tg, D)
+    xf = maybe_shard(xf, P(("pod", "data"), None, None))
+    logits = jnp.einsum("gtd,de->gte", xf, p["router"])
+
+    # NOTE (§Perf h2d/h2f, both refuted): (a) forcing P(dp,'model',·,·) on
+    # the dispatch buffer makes the scatter lower as replicate+all-reduce of
+    # the whole buffer (~6x worse collective term); (b) flattening the
+    # per-group dispatch out of vmap also lowers worse (one global scatter
+    # that SPMD replicates).  The vmapped per-group dispatch below, steered
+    # only by the expert-weight sharding (EP over 'model', FSDP over the ef
+    # dim — `--moe-fsdp ef`), measures best.  See EXPERIMENTS.md §Perf.
+    def per_group(xg, lg):
+        probs = jax.nn.softmax(lg.astype(jnp.float32), axis=-1)
+        weights, ids = jax.lax.top_k(probs, K)             # (Tg, K)
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+        flat_ids = ids.reshape(-1)                         # (Tg*K,)
+        order = jnp.argsort(flat_ids)
+        sorted_ids = flat_ids[order]
+        counts = jnp.bincount(flat_ids, length=E)
+        starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                  jnp.cumsum(counts)[:-1]])
+        pos = jnp.arange(Tg * K) - starts[sorted_ids]
+        keep = pos < C
+        slot = jnp.where(keep, sorted_ids * C + pos, E * C)
+        tok_idx = order // K
+
+        buffer = jnp.zeros((E * C + 1, D), x.dtype)
+        buffer = buffer.at[slot].set(xg[tok_idx], mode="drop")
+        buf = buffer[:E * C].reshape(E, C, D)
+
+        h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+        h = jax.nn.silu(h) * u
+        out = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, D)
+
+        gathered = jnp.where(keep[:, None],
+                             out[jnp.minimum(slot, E * C - 1)], 0.0)
+        y = jnp.zeros((Tg * K, D), x.dtype).at[order].set(
+            gathered.astype(x.dtype))
+        y = y.reshape(Tg, K, D)
+        y = jnp.einsum("tkd,tk->td", y, weights.astype(x.dtype))
+        return y, (probs, counts)
+
+    y, (probs, counts) = jax.vmap(per_group)(xf, logits)
+
+    # Load-balancing auxiliary loss (Switch-style) + router z-loss.
+    me = jnp.mean(probs, axis=(0, 1))                      # (E,)
+    ce = jnp.mean(counts.astype(jnp.float32), axis=0) / (Tg * K)
+    aux_loss = m.aux_loss_coef * E * jnp.sum(me * ce)
+    zloss = m.router_zloss * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)))
+
+    y = y.reshape(B, S, D)
+    if m.num_shared_experts:
+        sp = p["shared"]
+        h = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        y = y + h @ sp["w_down"]
+    return y, {"aux_loss": aux_loss, "router_zloss": zloss}

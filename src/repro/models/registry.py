@@ -1,0 +1,98 @@
+"""Model facade: uniform init/loss/decode API over the model zoo, plus
+``input_specs`` (ShapeDtypeStruct stand-ins for the dry-run; no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    """Pure-function handles; `batch` dicts use keys
+    tokens/labels(/embeds/frames/positions)."""
+    init: Callable        # (key, cfg, dtype=..., num_layers=None) -> params
+    loss: Callable        # (params, cfg, batch, remat=False) -> (loss, metrics)
+    apply: Callable       # (params, cfg, batch) -> logits
+    init_cache: Callable  # (params, cfg, batch_size, max_len, dtype) -> cache
+    decode_step: Callable  # (params, cfg, tokens, cache, index) -> (logits, cache)
+
+
+def _lm_loss(params, cfg, batch, remat=False):
+    return transformer.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                               embeds=batch.get("embeds"),
+                               mask=batch.get("mask"), remat=remat)
+
+
+def _lm_apply(params, cfg, batch):
+    return transformer.lm_apply(params, cfg, batch["tokens"],
+                                embeds=batch.get("embeds"))[0]
+
+
+def _encdec_loss(params, cfg, batch, remat=False):
+    return encdec.encdec_loss(params, cfg, batch["tokens"], batch["labels"],
+                              batch["frames"], mask=batch.get("mask"),
+                              remat=remat)
+
+
+def _encdec_apply(params, cfg, batch):
+    return encdec.encdec_apply(params, cfg, batch["tokens"], batch["frames"])[0]
+
+
+def _encdec_init_cache(params, cfg, batch_size, max_len, dtype=jnp.bfloat16,
+                       enc_out=None):
+    if enc_out is None:
+        enc_out = jnp.zeros((batch_size, cfg.encoder_seq_len, cfg.d_model),
+                            dtype)
+    return encdec.encdec_init_cache(params, cfg, batch_size, max_len, enc_out,
+                                    dtype)
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.is_encoder_decoder:
+        return ModelApi(init=encdec.encdec_init, loss=_encdec_loss,
+                        apply=_encdec_apply, init_cache=_encdec_init_cache,
+                        decode_step=encdec.encdec_decode_step)
+    return ModelApi(init=transformer.lm_init, loss=_lm_loss, apply=_lm_apply,
+                    init_cache=transformer.lm_init_cache,
+                    decode_step=transformer.lm_decode_step)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct — never allocates)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Inputs for train_step/prefill: weak-type-correct stand-ins.
+
+    VLM/audio frontends are stubs: precomputed patch/frame embeddings are
+    supplied directly (assignment spec)."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if cfg.is_encoder_decoder:
+        return {"tokens": jax.ShapeDtypeStruct((B, S), tok),
+                "labels": jax.ShapeDtypeStruct((B, S), tok),
+                "frames": jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32)}
+    specs = {}
+    s_text = S
+    if cfg.frontend != "none" and cfg.num_frontend_embeds > 0:
+        s_text = S - cfg.num_frontend_embeds
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_frontend_embeds, cfg.d_model), jnp.float32)
+    specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), tok)
+    specs["labels"] = jax.ShapeDtypeStruct((B, s_text), tok)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Inputs for one serve_step: a single new token + the index."""
+    B = shape.global_batch
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "index": jax.ShapeDtypeStruct((), jnp.int32)}

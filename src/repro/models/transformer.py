@@ -1,0 +1,287 @@
+"""Scan-stacked decoder-only LM covering dense / GQA / MLA / sliding-window /
+softcap / MoE / Mamba-hybrid / RWKV architectures.
+
+Layer stacking
+--------------
+Layers are grouped into *super-blocks* of length ``cfg.pattern_period`` (1 for
+homogeneous stacks, 8 for Jamba's 1-attn:7-mamba pattern, 6 for Gemma3's 5:1
+local:global pattern...).  Every super-block has an identical pytree
+structure, so the stack is a single pytree whose leaves carry a leading
+``n_super = num_layers // period`` axis consumed by ``jax.lax.scan``:
+
+  * HLO size is depth-independent (critical for 60-layer dry-run compiles),
+  * progressive depth expansion (the paper's technique) is a pure reshape/
+    concat on the leading axis — identical machinery for all 10 archs.
+
+Zero-layer models (`n_super == 0`) skip the scan entirely: the model is
+[Embedding, LM_head(+norm)] exactly as in the paper's footnote 1.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (apply_norm, cross_entropy, dense_init,
+                                 embed_init, maybe_shard, norm_init, softcap)
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, layer_in_period: int, dtype):
+    """One layer's params; structure depends only on position-in-period."""
+    kind = cfg.layer_kind(layer_in_period)
+    ks = jax.random.split(key, 4)
+    p = {"ln1": norm_init(cfg.d_model, cfg.norm)}
+    if kind == "attn":
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+        p["ln2"] = norm_init(cfg.d_model, cfg.norm)
+        if cfg.layer_is_moe(layer_in_period):
+            p["moe"] = mlp_mod.moe_init(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = mlp_mod.mlp_init(ks[1], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = ssm_mod.mamba_init(ks[0], cfg, dtype)
+        if cfg.layer_is_moe(layer_in_period):
+            p["ln2"] = norm_init(cfg.d_model, cfg.norm)
+            p["moe"] = mlp_mod.moe_init(ks[1], cfg, dtype)
+    elif kind == "rwkv":
+        p["rwkv_tm"] = ssm_mod.rwkv_init(ks[0], cfg, dtype)
+        p["ln2"] = norm_init(cfg.d_model, cfg.norm)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def superblock_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    period = cfg.pattern_period
+    ks = jax.random.split(key, period)
+    return {f"layer{i}": _layer_init(ks[i], cfg, i, dtype)
+            for i in range(period)}
+
+
+def lm_init(key, cfg: ModelConfig, dtype=jnp.float32, num_layers=None):
+    """Initialize the full LM at depth `num_layers` (default cfg.num_layers)."""
+    L = cfg.num_layers if num_layers is None else num_layers
+    period = cfg.pattern_period
+    assert L % period == 0, (L, period)
+    n_super = L // period
+    ks = jax.random.split(key, n_super + 3)
+    params = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+              "final_norm": norm_init(cfg.d_model, cfg.norm)}
+    if cfg.position == "absolute":
+        params["pos_embed"] = (jax.random.normal(ks[1], (cfg.max_seq_len, cfg.d_model))
+                               * 0.01).astype(dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype)
+    if n_super > 0:
+        blocks = [superblock_init(ks[3 + i], cfg, dtype) for i in range(n_super)]
+        params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return params
+
+
+def num_superblocks(params) -> int:
+    if "blocks" not in params:
+        return 0
+    return jax.tree.leaves(params["blocks"])[0].shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(lp, cfg: ModelConfig, i: int, x, positions):
+    """One layer, full-sequence.  Returns (x, aux_losses)."""
+    kind = cfg.layer_kind(i)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        x = x + attn.attn_apply(lp["attn"], cfg, h, positions,
+                                window=cfg.layer_window(i))
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        if cfg.layer_is_moe(i):
+            y, a = mlp_mod.moe_apply(lp["moe"], cfg, h)
+            aux = aux + a["aux_loss"] + a["router_zloss"]
+        else:
+            y = mlp_mod.mlp_apply(lp["mlp"], cfg, h)
+        x = x + y
+    elif kind == "mamba":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        x = x + ssm_mod.mamba_apply(lp["mamba"], cfg, h)
+        if cfg.layer_is_moe(i):
+            h = apply_norm(lp["ln2"], x, cfg.norm)
+            y, a = mlp_mod.moe_apply(lp["moe"], cfg, h)
+            aux = aux + a["aux_loss"] + a["router_zloss"]
+            x = x + y
+    elif kind == "rwkv":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        x = x + ssm_mod.rwkv_time_mix(lp["rwkv_tm"], cfg, h)
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        x = x + ssm_mod.rwkv_channel_mix(lp["rwkv_tm"], cfg, h)
+    x = maybe_shard(x, P(("pod", "data"), "model", None))
+    return x, aux
+
+
+def _apply_superblock(sb, cfg: ModelConfig, x, positions):
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(cfg.pattern_period):
+        x, a = _apply_layer(sb[f"layer{i}"], cfg, i, x, positions)
+        aux = aux + a
+    return x, aux
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens, embeds=None, offset=0):
+    """Token (+optional precomputed frontend) embedding.  tokens: (B, S_txt);
+    embeds (frontend stub output): (B, N_front, d_model) prepended."""
+    x = params["embed"][tokens]
+    if cfg.position == "absolute":
+        S = tokens.shape[1]
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], offset, S, 0)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _positions_for(cfg: ModelConfig, B, S):
+    pos = jnp.arange(S)[None, :]
+    if cfg.position == "mrope":
+        return jnp.broadcast_to(pos[None], (3, B, S))      # text-only stub ids
+    return jnp.broadcast_to(pos, (B, S))
+
+
+def lm_apply(params, cfg: ModelConfig, tokens, embeds=None, positions=None,
+             remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S_total, V), aux_loss scalar)."""
+    x = embed_tokens(params, cfg, tokens, embeds)
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = _positions_for(cfg, B, S)
+    x = maybe_shard(x, P(("pod", "data"), None, None))
+    n_super = num_superblocks(params)
+    aux = jnp.zeros((), jnp.float32)
+    if n_super > 0:
+        body = functools.partial(_apply_superblock, cfg=cfg, positions=positions)
+
+        def scan_fn(carry, sb):
+            x, aux = carry
+            x, a = body(sb, x=x)
+            return (x, aux + a), None
+        if remat:
+            # remat policy knob (§Perf): True/'nothing' recomputes everything
+            # inside each super-block; 'dots' saves matmul outputs (less
+            # recompute, more live memory).
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if remat == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            scan_fn = jax.checkpoint(scan_fn, policy=policy)
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, aux), params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap(x @ head, cfg.final_logit_softcap)
+    logits = maybe_shard(logits, P(("pod", "data"), None, "model"))
+    return logits, aux
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, embeds=None,
+            mask=None, remat: bool = False):
+    logits, aux = lm_apply(params, cfg, tokens, embeds=embeds, remat=remat)
+    if embeds is not None:                  # loss on the text tail only
+        logits = logits[:, embeds.shape[1]:]
+    loss = cross_entropy(logits, labels, mask)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, stacked caches)
+# ---------------------------------------------------------------------------
+
+
+def lm_init_cache(params, cfg: ModelConfig, batch_size: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    """Cache pytree mirroring the super-block stack (leading n_super axis)."""
+    n_super = num_superblocks(params)
+    if n_super == 0:
+        return {}
+
+    def one_layer_cache(i):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            return attn.init_kv_cache(cfg, batch_size, max_len, dtype,
+                                      window=cfg.layer_window(i))
+        if kind == "mamba":
+            return ssm_mod.mamba_init_state(cfg, batch_size)
+        if kind == "rwkv":
+            return ssm_mod.rwkv_init_state(cfg, batch_size)
+        raise ValueError(kind)
+
+    one = {f"layer{i}": one_layer_cache(i) for i in range(cfg.pattern_period)}
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_super,) + x.shape).copy(), one)
+
+
+def _decode_layer(lp, cache_l, cfg: ModelConfig, i: int, x, index, positions):
+    kind = cfg.layer_kind(i)
+    if kind == "attn":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        y, cache_l = attn.attn_decode(lp["attn"], cfg, h, cache_l, index,
+                                      positions, window=cfg.layer_window(i))
+        x = x + y
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        if cfg.layer_is_moe(i):
+            y, _ = mlp_mod.moe_apply(lp["moe"], cfg, h)
+        else:
+            y = mlp_mod.mlp_apply(lp["mlp"], cfg, h)
+        x = x + y
+    elif kind == "mamba":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        y, cache_l = ssm_mod.mamba_decode(lp["mamba"], cfg, h, cache_l)
+        x = x + y
+        if cfg.layer_is_moe(i):
+            h = apply_norm(lp["ln2"], x, cfg.norm)
+            y, _ = mlp_mod.moe_apply(lp["moe"], cfg, h)
+            x = x + y
+    elif kind == "rwkv":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        y, cache_l = ssm_mod.rwkv_decode(lp["rwkv_tm"], cfg, h, cache_l)
+        x = x + y
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        y, cache_l = ssm_mod.rwkv_channel_mix_decode(lp["rwkv_tm"], cfg, h, cache_l)
+        x = x + y
+    return x, cache_l
+
+
+def lm_decode_step(params, cfg: ModelConfig, tokens, cache, index,
+                   positions=None):
+    """tokens: (B, 1) -> (logits (B, 1, V), new_cache).  `index` is the number
+    of tokens already in the cache (absolute position of the new token)."""
+    B = tokens.shape[0]
+    x = embed_tokens(params, cfg, tokens, offset=0)
+    if cfg.position == "absolute":
+        x = params["embed"][tokens] + params["pos_embed"][index][None, None, :]
+    if positions is None:
+        pos = jnp.full((B, 1), index)
+        positions = jnp.broadcast_to(pos[None], (3, B, 1)) \
+            if cfg.position == "mrope" else pos
+    n_super = num_superblocks(params)
+    if n_super > 0:
+        def scan_fn(x, sb_and_cache):
+            sb, cache_sb = sb_and_cache
+            for i in range(cfg.pattern_period):
+                x, new_c = _decode_layer(sb[f"layer{i}"], cache_sb[f"layer{i}"],
+                                         cfg, i, x, index, positions)
+                cache_sb[f"layer{i}"] = new_c
+            return x, cache_sb
+        x, cache = jax.lax.scan(scan_fn, x, (params["blocks"], cache))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap(x @ head, cfg.final_logit_softcap)
+    return logits, cache

@@ -1,0 +1,36 @@
+"""AdamW (paper baseline optimizer, Fig 18: WSD lr=0.0005, cosine 0.001)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.optim.base import Optimizer, clip_by_global_norm
+
+
+def adamw(cfg: OptimizerConfig) -> Optimizer:
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+
+    def init(params):
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                     params)
+        return {"step": jnp.zeros((), jnp.int32), "m": zeros(), "v": zeros()}
+
+    def update(grads, state, params, lr):
+        grads = clip_by_global_norm(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def one(p, m, v):
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            return ((1.0 - lr * wd) * p.astype(jnp.float32)
+                    - lr * upd).astype(p.dtype)
+
+        return jax.tree.map(one, params, m, v), {"step": step, "m": m, "v": v}
+
+    return Optimizer("adamw", init, update)

@@ -1,0 +1,45 @@
+"""Minimal pure-JAX optimizer library (no optax dependency).
+
+Contract (required by ``repro.core.expansion.expand_opt_state``):
+  * ``init(params) -> state`` where state is a dict with 'step' plus
+    params-like moment trees under 'm' (and 'v' for Adam).
+  * ``update(grads, state, params, lr) -> (new_params, new_state)`` — `lr` is
+    the scheduled scalar for this step; schedules live outside the optimizer
+    so progressive training can share one schedule across expansions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: x * scale, grads)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    from repro.optim import adamw, muon, sgd
+    builders = {"muon_nsgd": muon.muon_nsgd, "adamw": adamw.adamw,
+                "nsgd": sgd.nsgd, "sgd": sgd.sgd}
+    return builders[cfg.name](cfg)

@@ -1,0 +1,49 @@
+"""SGD and normalized SGD (paper ablation optimizers; NSGD is also the
+non-matrix half of Muon-NSGD and the cheap pre-expansion optimizer of §C.3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.optim.base import Optimizer, clip_by_global_norm
+
+
+def _momentum_init(params):
+    return {"step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p), params)}
+
+
+def sgd(cfg: OptimizerConfig) -> Optimizer:
+    beta, wd = cfg.momentum, cfg.weight_decay
+
+    def update(grads, state, params, lr):
+        grads = clip_by_global_norm(grads, cfg.grad_clip)
+        m = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype),
+                         state["m"], grads)
+        new = jax.tree.map(
+            lambda p, m: ((1.0 - lr * wd) * p.astype(jnp.float32)
+                          - lr * m.astype(jnp.float32)).astype(p.dtype),
+            params, m)
+        return new, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer("sgd", _momentum_init, update)
+
+
+def nsgd(cfg: OptimizerConfig) -> Optimizer:
+    beta, wd = cfg.momentum, cfg.weight_decay
+
+    def update(grads, state, params, lr):
+        grads = clip_by_global_norm(grads, cfg.grad_clip)
+        m = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype),
+                         state["m"], grads)
+
+        def one(p, m):
+            mf = m.astype(jnp.float32)
+            upd = mf / (jnp.linalg.norm(mf.reshape(-1)) + 1e-9)
+            return ((1.0 - lr * wd) * p.astype(jnp.float32)
+                    - lr * upd).astype(p.dtype)
+
+        return jax.tree.map(one, params, m), {"step": state["step"] + 1, "m": m}
+
+    return Optimizer("nsgd", _momentum_init, update)

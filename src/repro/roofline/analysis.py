@@ -1,0 +1,159 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+``cost_analysis`` supplies FLOPs/bytes; collective bytes are parsed from the
+optimized HLO (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute result sizes, with an op-dependent traffic factor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+from repro.configs.base import (HW_HBM_BW, HW_ICI_BW, HW_PEAK_FLOPS,
+                                ModelConfig, ShapeConfig)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# Approximate traffic multiplier per collective (ring algorithms, large N):
+# all-reduce moves ~2x the tensor, gather/scatter ~1x.
+_OP_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\(?[a-z0-9]+\[[^\]]*\][^=]*?)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result sizes of collective ops in optimized HLO, by op kind.
+    `-done` ops are skipped (the `-start` op carries the shape)."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        shapes, op = m.group(1), m.group(2)
+        out[op] = out.get(op, 0.0) + _shape_bytes(shapes)
+    return out
+
+
+def weighted_collective_bytes(by_op: Dict[str, float]) -> float:
+    return sum(v * _OP_FACTOR.get(k, 1.0) for k, v in by_op.items())
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes_weighted: float
+    coll_by_op: Dict[str, float]
+    model_flops: float               # 6·N(_active)·D useful-compute estimate
+    per_device_memory: Optional[dict] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * HW_PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HW_HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_weighted / (self.chips * HW_ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful FLOPs / (chips × peak × achievable step time) — the score.
+        Achievable time is max(terms) assuming perfect overlap."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.model_flops / (self.chips * HW_PEAK_FLOPS * max(t, 1e-30))
+
+    def to_json(self) -> dict:
+        return {**dataclasses.asdict(self),
+                "t_compute": self.t_compute, "t_memory": self.t_memory,
+                "t_collective": self.t_collective, "dominant": self.dominant,
+                "useful_ratio": self.useful_ratio,
+                "roofline_fraction": self.roofline_fraction}
+
+
+def model_flops_estimate(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful-compute floor: 6·N·tokens (dense) / 6·N_active·tokens (MoE),
+    plus causal attention window FLOPs; decode counts one token/seq."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.mode == "train":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 3.0               # fwd + bwd
+    elif shape.mode == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 1.0
+    else:                        # decode: one new token per sequence
+        tokens = shape.global_batch
+        mult = 1.0
+    flops = 2.0 * n_active * tokens * mult
+    # attention scores/values term
+    attn_layers = sum(1 for i in range(cfg.num_layers)
+                      if cfg.layer_kind(i) == "attn")
+    if attn_layers:
+        hd, H = cfg.head_dim, cfg.num_heads
+        if shape.mode == "decode":
+            ctx = shape.seq_len
+            flops += mult * 4.0 * attn_layers * H * hd * ctx * shape.global_batch
+        else:
+            per_layer = 0.0
+            for i in range(cfg.num_layers):
+                if cfg.layer_kind(i) != "attn":
+                    continue
+                w = cfg.layer_window(i)
+                eff = min(w, shape.seq_len) if w > 0 else shape.seq_len
+                per_layer += 4.0 * H * hd * shape.seq_len * eff * 0.5
+            flops += mult * per_layer * shape.global_batch
+    return flops
+
+
+def load_terms(path: str) -> RooflineTerms:
+    with open(path) as f:
+        d = json.load(f)
+    keys = {f.name for f in dataclasses.fields(RooflineTerms)}
+    return RooflineTerms(**{k: v for k, v in d.items() if k in keys})

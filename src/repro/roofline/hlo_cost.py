@@ -1,0 +1,302 @@
+"""HLO cost walker with loop trip-count multiplication.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+ignoring the trip count.  Every model here scans over layers (and flash
+attention scans over k-blocks), so the built-in numbers undercount by the
+scan lengths.  This walker parses optimized HLO text and:
+
+  * multiplies while-body costs by the parsed trip count,
+  * recurses through fusion/call/conditional computations,
+  * computes dot FLOPs exactly from dot_dimension_numbers,
+  * attributes memory traffic at fusion boundaries (a fusion reads its
+    operands and writes its result once — interior temps stay in registers/
+    VMEM), approximating HBM bytes,
+  * accumulates collective bytes (all-gather/all-reduce/reduce-scatter/
+    all-to-all/collective-permute) *including collectives inside loops*.
+
+It is deliberately conservative: unknown opcodes cost prod(result shape)
+flops (elementwise estimate) and their operand/result bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?)\s*([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+(?:\([^)]*\))?.*\{\s*$")
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# Regions implemented as Pallas TPU kernels: their *interior* temps live in
+# VMEM on the target hardware (the jnp fallback only exists for CPU lowering
+# and tests), so their byte traffic is tracked separately and excluded from
+# the HBM memory-roofline term ("kernel-adjusted" accounting).
+KERNEL_REGION_MARKERS = ("blocked_attention", "wkv_chunked", "wkv_ref",
+                         "selective_scan_chunked", "selective_scan_ref",
+                         "newton_schulz")
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _in_kernel_region(rest: str) -> bool:
+    m = _METADATA_RE.search(rest)
+    if not m:
+        return False
+    name = m.group(1)
+    return any(k in name for k in KERNEL_REGION_MARKERS)
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dtype, dims in _shapes_in(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _elems_of_first(text: str) -> int:
+    shapes = _shapes_in(text)
+    if not shapes:
+        return 0
+    n = 1
+    for d in shapes[0][1]:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_text: str
+    opcode: str
+    rest: str           # operands + attributes text
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    kernel_bytes: float = 0.0       # interior traffic of Pallas-kernel regions
+    coll: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {}
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.kernel_bytes += other.kernel_bytes
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.kernel_bytes * k,
+                    {kk: v * k for kk, v in self.coll.items()})
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Op]] = {}
+        self._parse(hlo_text)
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+        self.entry = self._find_entry(hlo_text)
+
+    # -- parsing -------------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if "/*" in line:      # strip /*index=N*/ comments (contain '=')
+                line = re.sub(r"/\*.*?\*/", "", line)
+            if line.rstrip().endswith("{") and not line.lstrip().startswith("%constant"):
+                m = _COMP_HDR_RE.match(line.strip())
+                if m and ("->" in line or line.strip().startswith(("ENTRY", "%"))):
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if m:
+                name, result, opcode, rest = m.groups()
+                self.computations[cur].append(Op(name, result, opcode, rest))
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        if m:
+            return m.group(1)
+        # fall back: the largest computation
+        return max(self.computations, key=lambda k: len(self.computations[k]))
+
+    # -- trip counts ----------------------------------------------------------
+    @lru_cache(maxsize=None)
+    def _trip_count(self, cond_name: str) -> int:
+        ops = self.computations.get(cond_name, [])
+        consts = []
+        for op in ops:
+            if op.opcode == "constant":
+                for m in re.finditer(r"constant\((-?\d+)\)", op.opcode + "(" + op.rest):
+                    consts.append(int(m.group(1)))
+            m = re.search(r"constant\((-?\d+)\)", op.rest)
+            if m:
+                consts.append(int(m.group(1)))
+        pos = [c for c in consts if c > 0]
+        return max(pos) if pos else 1
+
+    # -- shape table per computation -------------------------------------------
+    @lru_cache(maxsize=None)
+    def _shape_table(self, comp: str) -> Dict[str, str]:
+        return {op.name: op.result_text for op in self.computations.get(comp, [])}
+
+    # -- cost ------------------------------------------------------------------
+    def cost_of(self, comp: str, count_bytes: bool = True) -> Cost:
+        key = (comp, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        self._memo[key] = total        # break cycles defensively
+        table = self._shape_table(comp)
+        for op in self.computations.get(comp, []):
+            total += self._op_cost(op, table, count_bytes)
+        return total
+
+    def _operand_names(self, rest: str) -> List[str]:
+        # operands are leading %refs before any attribute
+        head = rest.split("),")[0]
+        return re.findall(r"%([\w.\-]+)", head)
+
+    def _op_cost(self, op: Op, table: Dict[str, str], count_bytes: bool) -> Cost:
+        oc = op.opcode
+        c = Cost()
+        if oc in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "after-all", "custom-call"):
+            return c
+
+        if oc == "while":
+            body = cond = None
+            mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+            mc = _COND_RE.search(op.rest)
+            if mb:
+                body = mb.group(1)
+            if mc:
+                cond = mc.group(1)
+            trips = self._trip_count(cond) if cond else 1
+            if body:
+                c += self.cost_of(body, count_bytes).scaled(trips)
+            return c
+
+        if oc == "fusion":
+            m = _CALLS_RE.search(op.rest)
+            if m:
+                # interior of a fusion: flops only; memory moves at boundary
+                inner = self.cost_of(m.group(1), count_bytes=False)
+                c += Cost(inner.flops, 0.0, 0.0, inner.coll)
+            if count_bytes:
+                b = _bytes_of(op.result_text)
+                for o in self._operand_names(op.rest):
+                    b += _bytes_of(table.get(o, ""))
+                self._add_bytes(c, op, b)
+            return c
+
+        if oc in ("call", "async-start"):
+            m = _CALLS_RE.search(op.rest)
+            if m:
+                c += self.cost_of(m.group(1), count_bytes)
+            return c
+
+        if oc == "conditional":
+            m = _BRANCHES_RE.search(op.rest)
+            if m:
+                branches = re.findall(r"%([\w.\-]+)", m.group(1))
+                costs = [self.cost_of(b, count_bytes) for b in branches]
+                if costs:
+                    # take the max-flops branch (both rarely both execute)
+                    c += max(costs, key=lambda x: x.flops)
+            return c
+
+        base = oc.replace("-start", "").replace("-done", "")
+        if base in COLLECTIVES:
+            if not oc.endswith("-done"):
+                c.coll[base] = c.coll.get(base, 0.0) + _bytes_of(op.result_text)
+            return c
+
+        if oc in ("dot", "convolution"):
+            res_elems = _elems_of_first(op.result_text)
+            contract = 1
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+            ops_ = self._operand_names(op.rest)
+            lhs_shape = _shapes_in(table.get(ops_[0], "")) if ops_ else []
+            if m and lhs_shape:
+                dims = lhs_shape[0][1]
+                for d in m.group(1).split(","):
+                    if d and int(d) < len(dims):
+                        contract *= dims[int(d)]
+            elif lhs_shape:
+                contract = lhs_shape[0][1][-1] if lhs_shape[0][1] else 1
+            c.flops += 2.0 * res_elems * contract
+            if count_bytes:
+                b = _bytes_of(op.result_text)
+                for o in ops_:
+                    b += _bytes_of(table.get(o, ""))
+                self._add_bytes(c, op, b)
+            return c
+
+        # default: elementwise-ish
+        c.flops += float(_elems_of_first(op.result_text))
+        if count_bytes:
+            b = _bytes_of(op.result_text)
+            for o in self._operand_names(op.rest)[:3]:
+                b += _bytes_of(table.get(o, ""))
+            self._add_bytes(c, op, b)
+        return c
+
+    @staticmethod
+    def _add_bytes(c: Cost, op: Op, b: float):
+        if _in_kernel_region(op.rest):
+            c.kernel_bytes += b
+        else:
+            c.bytes += b
+
+    def total(self) -> Cost:
+        self._memo.clear()
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    model = HloCostModel(hlo_text)
+    cost = model.total()
+    return {"flops": cost.flops,
+            "bytes": cost.bytes,                       # kernel-adjusted HBM
+            "kernel_bytes": cost.kernel_bytes,         # VMEM-resident on TPU
+            "bytes_raw": cost.bytes + cost.kernel_bytes,
+            "collectives": dict(cost.coll)}

@@ -1,0 +1,61 @@
+"""Jitted train/eval/serve step builders."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.optim.base import Optimizer
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, schedule: Callable,
+                    remat: bool = False, donate: bool = True) -> Callable:
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    The schedule is evaluated *inside* the step from the global step counter,
+    so one compiled step serves the whole WSD plateau, and the same schedule
+    object spans the expansion boundary (hyperparameter transfer)."""
+    api = registry.get_model(cfg)
+
+    def step_fn(params, opt_state, batch, step):
+        lr = schedule(step)
+
+        def loss_fn(p):
+            return api.loss(p, cfg, batch, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        out = {"loss": loss, "lr": lr, **metrics}
+        return params, opt_state, out
+
+    return jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    api = registry.get_model(cfg)
+
+    @jax.jit
+    def eval_step(params, batch):
+        loss, metrics = api.loss(params, cfg, batch)
+        return metrics["ce"]
+
+    return eval_step
+
+
+def make_decode_step(cfg: ModelConfig, donate_cache: bool = True) -> Callable:
+    """(params, tokens(B,1), cache, index) -> (logits, cache).  The cache is
+    donated: decode updates in place on device."""
+    api = registry.get_model(cfg)
+
+    def fn(params, tokens, cache, index):
+        return api.decode_step(params, cfg, tokens, cache, index)
+
+    return jax.jit(fn, donate_argnums=(2,) if donate_cache else ())
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

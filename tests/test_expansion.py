@@ -1,0 +1,158 @@
+"""Depth-expansion operator tests (paper §3, §A, Table 1/2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import expansion as exp
+from repro.models import registry
+from repro.optim.base import make_optimizer
+from repro.configs.base import OptimizerConfig
+
+
+def tiny_cfg(layers=2, **kw):
+    defaults = dict(name="t", family="dense", num_layers=layers, d_model=32,
+                    num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                    max_seq_len=64)
+    defaults.update(kw)
+    return ModelConfig(**defaults)
+
+
+def init_at(cfg, layers, seed=0):
+    api = registry.get_model(cfg)
+    return api.init(jax.random.PRNGKey(seed), cfg, num_layers=layers)
+
+
+def loss_of(cfg, params, seed=3):
+    api = registry.get_model(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (2, 16), 0,
+                              cfg.vocab_size)
+    loss, _ = api.loss(params, cfg, {"tokens": toks, "labels": toks})
+    return float(loss)
+
+
+def n_blocks(params):
+    return jax.tree.leaves(params["blocks"])[0].shape[0]
+
+
+# ---------------------------------------------------------------------------
+# index maps
+# ---------------------------------------------------------------------------
+
+def test_source_index_maps():
+    assert exp._source_index_map(3, 6, "copying_stack") == [0, 1, 2, 0, 1, 2]
+    assert exp._source_index_map(3, 6, "copying_inter") == [0, 0, 1, 1, 2, 2]
+    assert exp._source_index_map(3, 6, "copying_last") == [0, 1, 2, 2, 2, 2]
+    # non-divisible targets stay valid
+    for m in ("copying_stack", "copying_inter", "copying_last"):
+        idx = exp._source_index_map(3, 7, m)
+        assert len(idx) == 7 and all(0 <= i < 3 for i in idx)
+
+
+@pytest.mark.parametrize("method", ["random", "copying_stack", "copying_inter",
+                                    "copying_last", "copying_zeroL", "zero"])
+def test_expand_preserves_old_blocks(method):
+    cfg = tiny_cfg(6)
+    small = init_at(cfg.with_depth(2), 2)
+    grown = exp.expand_params(small, cfg.with_depth(2), 6, method,
+                              key=jax.random.PRNGKey(1))
+    assert n_blocks(grown) == 6
+    if method in ("random", "zero", "copying_stack", "copying_last",
+                  "copying_zeroL"):
+        # insert_at='bottom': first 2 target blocks == source blocks
+        old = jax.tree.leaves(small["blocks"])
+        new = jax.tree.leaves(grown["blocks"])
+        for o, n in zip(old, new):
+            np.testing.assert_array_equal(np.asarray(o), np.asarray(n[:2]))
+    # embed/head inherited
+    np.testing.assert_array_equal(np.asarray(small["embed"]),
+                                  np.asarray(grown["embed"]))
+
+
+def test_zero_layer_source_random_only():
+    cfg = tiny_cfg(4)
+    zero_params = init_at(cfg.with_depth(0), 0)
+    assert "blocks" not in zero_params
+    grown = exp.expand_params(zero_params, cfg.with_depth(0), 4, "random",
+                              key=jax.random.PRNGKey(0))
+    assert n_blocks(grown) == 4
+    with pytest.raises(ValueError):
+        exp.expand_stack(None, 4, "copying_stack")
+
+
+def test_function_preserving_zero_and_copying_zeroL():
+    """zero and copying_zeroL must keep the loss EXACTLY (Table 1)."""
+    cfg = tiny_cfg(4)
+    small_cfg = cfg.with_depth(2)
+    small = init_at(small_cfg, 2, seed=5)
+    base = loss_of(small_cfg, small)
+    for method in ("zero", "copying_zeroL"):
+        grown = exp.expand_params(small, small_cfg, 4, method,
+                                  key=jax.random.PRNGKey(2))
+        assert abs(loss_of(cfg, grown) - base) < 1e-4, method
+    # copying is NOT function-preserving
+    grown = exp.expand_params(small, small_cfg, 4, "copying_stack")
+    assert abs(loss_of(cfg, grown) - base) > 1e-3
+
+
+def test_zero_blocks_gradient_flow():
+    """'zero' kills the new layers' gradient (Takeaway 2); 'random' does not."""
+    cfg = tiny_cfg(4)
+    small_cfg = cfg.with_depth(2)
+    small = init_at(small_cfg, 2)
+    api = registry.get_model(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0, 64)
+
+    def grad_new_block_norm(params):
+        g = jax.grad(lambda p: api.loss(p, cfg, {"tokens": toks,
+                                                 "labels": toks})[0])(params)
+        # wq grad of the 3rd block (new)
+        return float(jnp.linalg.norm(g["blocks"]["layer0"]["attn"]["wq"][3]))
+
+    zero_grown = exp.expand_params(small, small_cfg, 4, "zero",
+                                   key=jax.random.PRNGKey(1))
+    rand_grown = exp.expand_params(small, small_cfg, 4, "random",
+                                   key=jax.random.PRNGKey(1))
+    # zero: residual branch output is 0 and inputs die inside the block ->
+    # matrix grads vanish (only ln scales get signal)
+    assert grad_new_block_norm(zero_grown) < 1e-6
+    assert grad_new_block_norm(rand_grown) > 1e-6
+
+
+def test_expand_opt_state_policies():
+    cfg = tiny_cfg(4)
+    small_cfg = cfg.with_depth(2)
+    small = init_at(small_cfg, 2)
+    opt = make_optimizer(OptimizerConfig(name="muon_nsgd"))
+    state = opt.init(small)
+    state["m"] = jax.tree.map(lambda x: jnp.ones_like(x), state["m"])
+    state["step"] = jnp.asarray(7, jnp.int32)
+    grown = exp.expand_params(small, small_cfg, 4, "copying_stack")
+
+    inh = exp.expand_opt_state(state, grown, "inherit", "copying_stack")
+    m = inh["m"]["blocks"]["layer0"]["attn"]["wq"]
+    assert m.shape[0] == 4
+    assert float(jnp.abs(m[:2]).sum()) > 0 and float(jnp.abs(m[2:]).sum()) == 0
+    assert int(inh["step"]) == 7
+
+    cop = exp.expand_opt_state(state, grown, "copy", "copying_stack")
+    m = cop["m"]["blocks"]["layer0"]["attn"]["wq"]
+    assert float(jnp.abs(m[2:]).sum()) > 0
+
+    rst = exp.expand_opt_state(state, grown, "reset", "copying_stack")
+    assert int(rst["step"]) == 0
+    assert all(float(jnp.abs(x).sum()) == 0
+               for x in jax.tree.leaves(rst["m"]))
+
+
+def test_patterned_arch_expansion_units():
+    """Gemma-like 2-layer pattern: expansion operates on super-blocks so the
+    local:global pattern is preserved at any depth."""
+    cfg = tiny_cfg(8, window_pattern=(4, 0))
+    assert cfg.pattern_period == 2
+    small = init_at(cfg.with_depth(2), 2)
+    grown = exp.expand_params(small, cfg.with_depth(2), 8, "copying_stack")
+    assert n_blocks(grown) == 4          # 4 super-blocks of 2 layers
+    with pytest.raises(ValueError):
+        cfg.with_depth(7)                # not a multiple of the period

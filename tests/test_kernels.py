@@ -1,0 +1,153 @@
+"""Pallas kernel validation: interpret-mode kernel vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.kernel import flash_attention_tpu
+from repro.kernels.mamba_scan.kernel import selective_scan_tpu
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+from repro.kernels.newton_schulz import kernel as ns_kernel
+from repro.kernels.newton_schulz import ops as ns_ops
+from repro.kernels.newton_schulz.ref import newton_schulz_ref
+from repro.kernels.rwkv6.kernel import wkv_tpu
+from repro.kernels.rwkv6.ref import wkv_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,KV,hd", [(64, 2, 2, 32), (128, 4, 2, 64),
+                                       (96, 4, 1, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(S, H, KV, hd, dtype):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    ref = fa_ref.naive_attention(q, k, v, causal=True, window=0)
+    pal = flash_attention_tpu(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window,softcap,causal", [(16, 0.0, True),
+                                                   (0, 20.0, True),
+                                                   (32, 30.0, True),
+                                                   (0, 0.0, False)])
+def test_flash_attention_masks(window, softcap, causal):
+    B, S, H, hd = 1, 128, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, hd)) for i in range(3))
+    kw = dict(causal=causal, window=window, logit_softcap=softcap)
+    ref = fa_ref.naive_attention(q, k, v, **kw)
+    blk = fa_ref.blocked_attention(q, k, v, block_k=32, **kw)
+    pal = flash_attention_tpu(q, k, v, block_q=32, block_k=32, interpret=True,
+                              **kw)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), atol=2e-5)
+
+
+def test_blocked_attention_cross_ragged():
+    """Cross-attention path: Sq != Sk, Sk not a multiple of block size."""
+    B, Sq, Sk, H, hd = 2, 16, 50, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k = jax.random.normal(ks[1], (B, Sk, H, hd))
+    v = jax.random.normal(ks[2], (B, Sk, H, hd))
+    ref = fa_ref.naive_attention(q, k, v, causal=False)
+    blk = fa_ref.blocked_attention(q, k, v, causal=False, block_k=16)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# newton-schulz
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(32, 64), (64, 32), (128, 128), (96, 40)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_newton_schulz_vs_ref(shape, dtype):
+    m = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+    ref = newton_schulz_ref(m)
+    pal = ns_ops.newton_schulz(m, force="pallas")
+    tol = 3e-2 if dtype == jnp.bfloat16 else 5e-5
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_newton_schulz_orthogonalizes():
+    m = jax.random.normal(jax.random.PRNGKey(1), (64, 128))
+    y = ns_ops.newton_schulz(m, force="pallas")
+    s = jnp.linalg.svd(y, compute_uv=False)
+    assert float(s.max()) < 1.35 and float(s.min()) > 0.3
+
+
+def test_tiled_matmul():
+    x = jax.random.normal(jax.random.PRNGKey(2), (256, 384))
+    y = jax.random.normal(jax.random.PRNGKey(3), (384, 128))
+    out = ns_kernel.matmul(x, y, bm=128, bk=128, bn=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ y),
+                               atol=1e-3, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,hd,chunk", [(32, 1, 16, 8), (64, 2, 16, 16),
+                                          (48, 2, 32, 16)])
+def test_wkv_vs_ref(S, H, hd, chunk):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, hd)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    s0 = jnp.zeros((B, H, hd, hd))
+    y_ref, sf_ref = wkv_ref(r, k, v, w, u, s0)
+    y_pal, sf_pal = wkv_tpu(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf_pal), np.asarray(sf_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_wkv_nonzero_initial_state():
+    B, S, H, hd = 1, 16, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, hd)) for i in range(3))
+    w = jnp.full((B, S, H, hd), 0.9)
+    u = jnp.zeros((H, hd))
+    s0 = jax.random.normal(ks[4], (B, H, hd, hd))
+    y_ref, _ = wkv_ref(r, k, v, w, u, s0)
+    y_pal, _ = wkv_tpu(r, k, v, w, u, s0, chunk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,d,N,chunk,bd", [(32, 16, 4, 8, 8),
+                                            (64, 32, 8, 16, 16),
+                                            (16, 8, 2, 16, 8)])
+def test_selective_scan_vs_ref(S, d, N, chunk, bd):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    u = jax.random.normal(ks[0], (B, S, d))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, d)))
+    A = -jnp.exp(jax.random.normal(ks[2], (d, N)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    Dp = jnp.ones((d,))
+    y_ref, _ = selective_scan_ref(u, dt, A, Bm, Cm, Dp)
+    y_pal = selective_scan_tpu(u, dt, A, Bm, Cm, Dp, chunk=chunk, block_d=bd,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=1e-5, rtol=1e-4)

@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a REDUCED
+same-family config, runs one forward/train step on CPU, asserts output shapes
+and no NaNs; decode-capable archs also run one serve step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.configs.base import OptimizerConfig
+from repro.core.schedules import wsd
+from repro.models import registry
+from repro.optim.base import make_optimizer
+from repro.train import steps as steps_lib
+
+ARCHS = list(cfglib.ASSIGNED_ARCHS) + ["gpt2-12l"]
+
+
+def make_batch(cfg, B=2, S=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    batch = {}
+    s_text = S
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq_len, cfg.d_model))
+    elif cfg.frontend != "none" and cfg.num_frontend_embeds:
+        batch["embeds"] = jax.random.normal(
+            key, (B, cfg.num_frontend_embeds, cfg.d_model))
+    toks = jax.random.randint(key, (B, s_text), 0, cfg.vocab_size)
+    batch["tokens"] = toks
+    batch["labels"] = toks
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = cfglib.get_smoke_config(arch) if arch in cfglib.ASSIGNED_ARCHS \
+        else cfglib.get_config(arch).with_depth(2)
+    if arch == "gpt2-12l":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, d_model=64, num_heads=4,
+                                  num_kv_heads=4, head_dim=16, d_ff=128,
+                                  vocab_size=256, max_seq_len=64)
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+
+    logits = api.apply(params, cfg, batch)
+    B = batch["tokens"].shape[0]
+    S_total = batch["tokens"].shape[1] + (
+        cfg.num_frontend_embeds if "embeds" in batch else 0)
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), "NaN in logits"
+
+    opt = make_optimizer(OptimizerConfig(name="muon_nsgd", learning_rate=0.01))
+    train_step = steps_lib.make_train_step(cfg, opt, wsd(0.01, 100),
+                                           donate=False)
+    state = opt.init(params)
+    new_params, _, metrics = train_step(params, state, batch, jnp.asarray(0))
+    assert np.isfinite(float(metrics["loss"])), arch
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in
+                zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = cfglib.get_smoke_config(arch) if arch in cfglib.ASSIGNED_ARCHS \
+        else None
+    if cfg is None:
+        pytest.skip("gpt2 covered in serve tests")
+    api = registry.get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    B = 2
+    if cfg.is_encoder_decoder:
+        from repro.models import encdec
+        frames = jax.random.normal(jax.random.PRNGKey(1),
+                                   (B, cfg.encoder_seq_len, cfg.d_model))
+        enc_out = encdec.encode(params, cfg, frames)
+        cache = api.init_cache(params, cfg, B, 8, dtype=jnp.float32,
+                               enc_out=enc_out)
+    else:
+        cache = api.init_cache(params, cfg, B, 8, dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0,
+                              cfg.vocab_size)
+    logits, new_cache = api.decode_step(params, cfg, toks, cache,
+                                        jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned hyperparameters."""
+    spec = {
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "rwkv6-7b": (32, 4096, None, None, 14336, 65536),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+    }
+    for arch, (L, d, H, KV, ff, V) in spec.items():
+        cfg = cfglib.get_config(arch)
+        assert cfg.num_layers == L, arch
+        assert cfg.d_model == d, arch
+        if H is not None:
+            assert cfg.num_heads == H, arch
+            assert cfg.num_kv_heads == KV, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == V, arch
+    # MoE structure
+    assert cfglib.get_config("moonshot-v1-16b-a3b").moe.num_experts == 64
+    assert cfglib.get_config("moonshot-v1-16b-a3b").moe.top_k == 6
+    assert cfglib.get_config("deepseek-moe-16b").moe.num_shared_experts == 2
+    assert cfglib.get_config("jamba-v0.1-52b").moe.num_experts == 16
+    # jamba 1:7 attn:mamba
+    bp = cfglib.get_config("jamba-v0.1-52b").block_pattern
+    assert len(bp) == 8 and bp.count("attn") == 1
+
+
+def test_applicable_shapes():
+    assert len(cfglib.applicable_shapes("yi-34b")) == 3        # no long_500k
+    assert len(cfglib.applicable_shapes("rwkv6-7b")) == 4
+    total = sum(len(cfglib.applicable_shapes(a)) for a in cfglib.ASSIGNED_ARCHS)
+    assert total == 34                                          # dry-run cells

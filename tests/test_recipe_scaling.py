@@ -1,0 +1,64 @@
+"""Recipe automation (paper §7 step 4), scaling-law fits (Fig 2), and the
+file-backed corpus reader."""
+import numpy as np
+import pytest
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, ScheduleConfig,
+                                TrainConfig)
+from repro.core.recipe import calibrate_tau
+from repro.core.scaling_laws import compare_exponents, fit_power_law
+from repro.data.corpus import BinCorpus, write_corpus
+
+
+def test_calibrate_tau_end_to_end():
+    cfg = ModelConfig(name="r", family="dense", num_layers=2, d_model=48,
+                      num_heads=4, num_kv_heads=4, d_ff=96, vocab_size=128,
+                      max_seq_len=64)
+    base = TrainConfig(total_steps=400, seq_len=24, global_batch=8,
+                       source_layers=0,
+                       optimizer=OptimizerConfig(name="muon_nsgd",
+                                                 learning_rate=0.02),
+                       schedule=ScheduleConfig(name="wsd", decay_frac=0.2))
+    res = calibrate_tau(cfg, base, probe_steps=50, tolerance=0.05,
+                        log_fn=lambda *a: None)
+    # τ must land inside the stable phase and after warmup
+    warmup = int(0.02 * base.total_steps)
+    stable_end = base.total_steps - int(0.2 * base.total_steps)
+    assert warmup < res.tau <= stable_end
+    e = res.train_config.expansions[0]
+    assert e.target_layers == cfg.num_layers
+    assert abs(e.at_frac - res.tau / base.total_steps) < 1e-9
+
+
+def test_fit_power_law_recovers_exponent():
+    rng = np.random.default_rng(0)
+    C = np.logspace(10, 14, 12)
+    true = 80.0 * C ** (-0.12) + 2.1
+    noisy = true * (1 + rng.normal(0, 0.005, size=C.shape))
+    fit = fit_power_law(C, noisy)
+    assert abs(fit.b - 0.12) < 0.03
+    assert abs(fit.c - 2.1) < 0.5
+
+
+def test_compare_exponents_prefers_steeper():
+    C = np.logspace(10, 14, 10)
+    fixed = [(c, 80 * c ** -0.10 + 2.0) for c in C]
+    prog = [(c, 60 * c ** -0.13 + 2.0) for c in C]
+    out = compare_exponents(fixed, prog)
+    assert out["progressive_better_exponent"]
+    assert out["compute_multiplier_at_matched_loss"] > 1.0
+
+
+def test_bin_corpus_roundtrip(tmp_path):
+    path = str(tmp_path / "toks.bin")
+    toks = np.arange(10_000) % 97
+    write_corpus(path, toks)
+    ds = BinCorpus(path, vocab_size=97, seq_len=16, global_batch=4, seed=1)
+    b1 = ds.batch(3)
+    b2 = BinCorpus(path, 97, 16, 4, seed=1).batch(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    s0 = ds.batch(0, shard=0, num_shards=2)
+    s1 = ds.batch(0, shard=1, num_shards=2)
+    assert s0["tokens"].shape == (2, 16)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
