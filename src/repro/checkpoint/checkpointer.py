@@ -32,6 +32,12 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _spec_str(x) -> str:
+    sharding = getattr(x, "sharding", None)
+    spec = getattr(sharding, "spec", None)
+    return "" if spec is None else str(spec)
+
+
 def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None,
          keep: int = 3) -> str:
     """Atomically save `tree` (params/opt state/...) at `step`."""
@@ -49,6 +55,9 @@ def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None,
         "step": step,
         "num_leaves": len(leaves),
         "treedef": str(treedef),
+        # Per-leaf source layout, for post-mortem debugging only: leaves are
+        # stored gathered, so restore is free to re-shard onto any mesh.
+        "shardings": [_spec_str(x) for x in leaves],
         "metadata": metadata or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:

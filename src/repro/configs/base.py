@@ -239,6 +239,10 @@ class TrainConfig:
     total_steps: int = 1000
     seq_len: int = 1024
     global_batch: int = 512
+    grad_accum: int = 1              # microbatches per step: global_batch is
+                                     # split into grad_accum microbatches and
+                                     # gradients averaged, decoupling batch
+                                     # size from device count
     source_layers: int = 1           # zero/one-layer source model
     expansions: Tuple[ExpansionConfig, ...] = ()
     optimizer: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)

@@ -182,6 +182,41 @@ def expand_params(params, cfg: ModelConfig, target_layers: int, method: str,
     return new_params
 
 
+def make_expand_fn(cfg: ModelConfig, target_layers: int, method: str,
+                   params, opt_state, insert_at: str = "bottom",
+                   opt_state_policy: str = "inherit", dtype=jnp.float32,
+                   mesh=None, fsdp: bool = True, layout: str = "tp"):
+    """Build a jitted ``(params, opt_state, key) -> (params, opt_state)``
+    whole-model depth expansion for state shaped like `params`/`opt_state`
+    (arrays or ShapeDtypeStructs — only shapes/dtypes are read here).
+
+    When ``mesh`` is given the expansion runs *under the mesh*: output
+    shardings for the expanded trees are resolved from
+    ``distributed.sharding`` (block stacks keep their per-leaf rules at the
+    new depth, moments mirror the params), so a 7B expansion is an on-device
+    reshape/concat — no host round-trip — and the caller can re-jit its
+    train step at the new depth against the returned, already-sharded state.
+    Returns ``(jitted_fn, params_shardings, opt_shardings)``; the shardings
+    are None when no mesh is given.
+    """
+    def expand_fn(params, opt_state, key):
+        new_p = expand_params(params, cfg, target_layers, method, key=key,
+                              insert_at=insert_at, dtype=dtype)
+        new_os = expand_opt_state(opt_state, new_p, opt_state_policy, method,
+                                  insert_at=insert_at)
+        return new_p, new_os
+
+    if mesh is None:
+        return jax.jit(expand_fn), None, None
+
+    from repro.distributed import sharding as shd
+    p_struct, os_struct = jax.eval_shape(expand_fn, params, opt_state,
+                                         jax.random.PRNGKey(0))
+    p_sh = shd.params_shardings(p_struct, mesh, fsdp=fsdp, layout=layout)
+    os_sh = shd.opt_state_shardings(os_struct, mesh, fsdp=fsdp, layout=layout)
+    return jax.jit(expand_fn, out_shardings=(p_sh, os_sh)), p_sh, os_sh
+
+
 def expand_opt_state(opt_state: dict, params_new, policy: str, method: str,
                      insert_at: str = "bottom") -> dict:
     """Expand optimizer state alongside params (paper §C.2).

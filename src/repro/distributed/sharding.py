@@ -127,6 +127,25 @@ def params_shardings(params, mesh: Mesh, fsdp: bool = True,
         params)
 
 
+def opt_state_shardings(opt_state, mesh: Mesh, fsdp: bool = True,
+                        moe_fsdp: str = "auto", layout: str = "tp"):
+    """NamedSharding pytree for an optimizer state.
+
+    Contract (``repro.optim``): the state is a dict whose params-like moment
+    trees live under 'm' / 'v' — those get the exact per-leaf rules of the
+    params they mirror (so ``expand_opt_state`` output re-shards identically
+    to the expanded params); 'step' and any other scalars are replicated.
+    """
+    out = {}
+    for k, v in opt_state.items():
+        if k in ("m", "v"):
+            out[k] = params_shardings(v, mesh, fsdp=fsdp, moe_fsdp=moe_fsdp,
+                                      layout=layout)
+        else:
+            out[k] = jax.tree.map(lambda _: replicated(mesh), v)
+    return out
+
+
 def batch_shardings(batch_specs, mesh: Mesh, layout: str = "tp"):
     """Shard every batch input over the DP axes on dim 0 (batch).
 

@@ -16,6 +16,7 @@ import json
 from repro import configs as cfglib
 from repro.configs.base import (ExpansionConfig, OptimizerConfig,
                                 ScheduleConfig, TrainConfig)
+from repro.launch import mesh as mesh_lib
 from repro.train import loop
 
 
@@ -46,6 +47,12 @@ def main(argv=None):
     ap.add_argument("--history-out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--mesh", default="single",
+                    help="mesh spec: single | host | prod | prod-multipod "
+                    "| AxB (data x model), e.g. 4x2")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="microbatches per step (gradient accumulation); "
+                    "must divide --batch")
     args = ap.parse_args(argv)
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
@@ -63,11 +70,12 @@ def main(argv=None):
         src = cfg.num_layers
     tcfg = TrainConfig(
         total_steps=args.steps, seq_len=args.seq_len, global_batch=args.batch,
-        source_layers=src, expansions=expansions,
+        grad_accum=args.grad_accum, source_layers=src, expansions=expansions,
         optimizer=OptimizerConfig(name=args.optimizer, learning_rate=args.lr),
         schedule=ScheduleConfig(name=args.schedule),
         seed=args.seed, remat=args.remat)
-    res = loop.train(cfg, tcfg, checkpoint_dir=args.ckpt_dir)
+    mesh = mesh_lib.make_train_mesh(args.mesh)
+    res = loop.train(cfg, tcfg, checkpoint_dir=args.ckpt_dir, mesh=mesh)
     print(f"final loss: {res.history['loss'][-1]:.4f} "
           f"(layers {res.final_layers})")
     if args.history_out:

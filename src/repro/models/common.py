@@ -55,12 +55,39 @@ def _apply_layout(spec: P) -> P:
     return P(*out)
 
 
+# Concrete mesh registered by the train/serve engine.  On jax versions with
+# an abstract-mesh context (>=0.5) that context wins; on older jax the
+# engine's registration is the only way activation constraints resolve, so
+# maybe_shard is a no-op unless an engine is active.
+_ACTIVE_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def set_active_mesh(mesh: Optional[jax.sharding.Mesh]):
+    """Register (or clear, with None) the engine's mesh for maybe_shard."""
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_active_mesh() -> Optional[jax.sharding.Mesh]:
+    return _ACTIVE_MESH
+
+
+def _current_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except AttributeError:
+        pass
+    return _ACTIVE_MESH
+
+
 def maybe_shard(x: jax.Array, spec: P) -> jax.Array:
     """Apply a sharding constraint when tracing under a mesh; no-op otherwise."""
     try:
         spec = _apply_layout(spec)
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:
+        mesh = _current_mesh()
+        if mesh is None:
             return x
         # Drop axes the current mesh doesn't have (e.g. 'pod' on single-pod)
         # and axes whose size doesn't divide the dimension (e.g. 8 KV heads
@@ -81,6 +108,10 @@ def maybe_shard(x: jax.Array, spec: P) -> jax.Array:
                     kept.append(a)
                     prod *= sizes[a]
             clean.append(tuple(kept) if kept else None)
+        clean = clean[:x.ndim]
+        if isinstance(mesh, jax.sharding.Mesh):     # concrete (engine) mesh
+            return jax.lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(mesh, P(*clean)))
         return jax.lax.with_sharding_constraint(x, P(*clean))
     except Exception:
         return x

@@ -1,0 +1,269 @@
+"""Mesh-aware progressive training engine.
+
+The ``ProgressiveTrainer`` runs the paper's recipe (§7) — source-model
+training → depth expansion at τ → grown-model training under one schedule
+and one optimizer — entirely *under a mesh*.  The sharding/microbatching
+contract:
+
+  * At init, per-leaf ``NamedSharding``s for params and optimizer state are
+    resolved from ``repro.distributed.sharding`` (MaxText-style name+shape
+    rules: TP over 'model', FSDP over 'data', pure DP over 'pod') against
+    the engine's mesh.  Train/eval steps are compiled with explicit
+    ``in_shardings``/``out_shardings`` and donated params+opt-state, so
+    state lives in its mesh layout for the whole run — there is no implicit
+    host round-trip anywhere in the hot path.
+  * Batches are host-generated at ``global_batch`` and placed sharded over
+    the data axes (``batch_shardings``).  With ``tcfg.grad_accum = A`` the
+    step scans A microbatches of ``global_batch/A`` with gradient
+    averaging, so the global batch size is decoupled from the device count:
+    the same config trains identically on 1 chip or 512 (up to float
+    reassociation).
+  * Depth expansion runs jitted under the mesh (``expansion.make_expand_fn``):
+    expanded block stacks come back with their per-leaf shardings at the new
+    depth and the train step is re-jitted against them — an on-device
+    reshape/concat, never a host transfer.
+  * Checkpoints gather to host (elastic: restore re-shards onto whatever
+    mesh the restoring run uses, including a different device count), and
+    every expansion boundary is checkpointed.
+
+``repro.train.loop.train`` wraps this engine with a degenerate 1x1 mesh,
+keeping the historical single-device API (and bit-exact numerics) intact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import expansion as exp
+from repro.core.schedules import make_schedule
+from repro.data.synthetic import DataConfig, SyntheticLM, make_eval_batches
+from repro.distributed import sharding as shd
+from repro.distributed.collectives import StragglerMonitor
+from repro.launch import mesh as mesh_lib
+from repro.models import common as model_common
+from repro.models import registry
+from repro.optim.base import make_optimizer
+from repro.train import steps as steps_lib
+
+
+@dataclasses.dataclass
+class TrainResult:
+    history: Dict[str, List]
+    params: object
+    opt_state: object
+    final_layers: int
+
+
+class ProgressiveTrainer:
+    """Sharded progressive-training engine (see module docstring)."""
+
+    def __init__(self, model_cfg: ModelConfig, tcfg: TrainConfig,
+                 mesh=None, checkpoint_dir: Optional[str] = None,
+                 data: Optional[SyntheticLM] = None, eval_batches=None,
+                 dtype=jnp.float32, log_fn: Callable = print,
+                 fsdp: bool = True, layout: str = "tp"):
+        if tcfg.global_batch % max(tcfg.grad_accum, 1):
+            raise ValueError(f"global_batch {tcfg.global_batch} not divisible "
+                             f"by grad_accum {tcfg.grad_accum}")
+        # Param init and 'random' expansion run inside jit under
+        # out_shardings, so random bits must not depend on the layout they
+        # are generated in: the legacy threefry lowering bakes the device
+        # layout into the bits (sharded init != single-device init), the
+        # partitionable lowering does not (and is the default on newer jax).
+        # Scoped to engine construction — importing this module changes
+        # nothing — and an explicit JAX_THREEFRY_PARTITIONABLE setting wins.
+        if "JAX_THREEFRY_PARTITIONABLE" not in os.environ:
+            jax.config.update("jax_threefry_partitionable", True)
+        self.model_cfg = model_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh if mesh is not None else mesh_lib.single_device_mesh()
+        self.checkpoint_dir = checkpoint_dir
+        self.dtype = dtype
+        self.log_fn = log_fn
+        self.fsdp = fsdp
+        self.layout = layout
+
+        dcfg = DataConfig(vocab_size=model_cfg.vocab_size,
+                          seq_len=tcfg.seq_len,
+                          global_batch=tcfg.global_batch, seed=tcfg.seed)
+        self.data = data or SyntheticLM(dcfg)
+        self.eval_batches = (eval_batches if eval_batches is not None
+                             else make_eval_batches(dcfg, tcfg.eval_batches))
+
+        self.opt = make_optimizer(tcfg.optimizer)
+        self.schedule = make_schedule(tcfg.schedule,
+                                      tcfg.optimizer.learning_rate,
+                                      tcfg.total_steps)
+        # batch shardings: data-axis on dim 0, resolved once against the
+        # DataConfig shapes (depth-independent; no host batch is generated
+        # just to learn them).  grad_accum microbatches re-resolve the spec
+        # at their own batch size (steps._microbatch).
+        sample = {k: jax.ShapeDtypeStruct(
+                      (tcfg.global_batch, tcfg.seq_len), np.int32)
+                  for k in ("tokens", "labels")}
+        self._batch_sh = shd.batch_shardings(sample, self.mesh,
+                                             layout=self.layout)
+        self._replicated = shd.replicated(self.mesh)
+
+    # -- sharding resolution -------------------------------------------------
+
+    def _state_shardings(self, cfg: ModelConfig):
+        """Per-leaf (shardings, abstract structs) for params/opt-state at
+        cfg's depth.  Nothing is allocated — structs come from eval_shape."""
+        api = registry.get_model(cfg)
+        p_struct = jax.eval_shape(
+            lambda k: api.init(k, cfg, dtype=self.dtype),
+            jax.random.PRNGKey(0))
+        os_struct = jax.eval_shape(self.opt.init, p_struct)
+        p_sh = shd.params_shardings(p_struct, self.mesh, fsdp=self.fsdp,
+                                    layout=self.layout)
+        os_sh = shd.opt_state_shardings(os_struct, self.mesh, fsdp=self.fsdp,
+                                        layout=self.layout)
+        return p_sh, os_sh, p_struct, os_struct
+
+    def _step_shardings(self, p_sh, os_sh) -> steps_lib.StepShardings:
+        return steps_lib.StepShardings(mesh=self.mesh, params=p_sh,
+                                       opt_state=os_sh, batch=self._batch_sh,
+                                       replicated=self._replicated,
+                                       layout=self.layout)
+
+    def _build_steps(self, cfg: ModelConfig, p_sh, os_sh):
+        sh = self._step_shardings(p_sh, os_sh)
+        train_step = steps_lib.make_train_step(
+            cfg, self.opt, self.schedule, remat=self.tcfg.remat,
+            grad_accum=self.tcfg.grad_accum, shardings=sh)
+        eval_step = steps_lib.make_eval_step(cfg, shardings=sh)
+        return train_step, eval_step
+
+    def _init_state(self, cfg: ModelConfig, p_sh, os_sh):
+        """Initialize params/opt-state directly into their mesh layout."""
+        api = registry.get_model(cfg)
+        params = jax.jit(lambda k: api.init(k, cfg, dtype=self.dtype),
+                         out_shardings=p_sh)(
+            jax.random.PRNGKey(self.tcfg.seed))
+        opt_state = jax.jit(self.opt.init, out_shardings=os_sh)(params)
+        return params, opt_state
+
+    def _place_batch(self, host_batch):
+        return jax.device_put(dict(host_batch), self._batch_sh)
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self) -> TrainResult:
+        # Activation constraints (model_common.maybe_shard) must agree with
+        # the engine's param/batch rules: register both the mesh and the
+        # activation layout for the duration of the run.
+        prev_mesh = model_common.get_active_mesh()
+        prev_layout = model_common.get_activation_layout()
+        model_common.set_active_mesh(self.mesh)
+        model_common.set_activation_layout(self.layout)
+        try:
+            return self._run()
+        finally:
+            model_common.set_active_mesh(prev_mesh)
+            model_common.set_activation_layout(prev_layout)
+
+    def _run(self) -> TrainResult:
+        tcfg, model_cfg = self.tcfg, self.model_cfg
+        exp_steps = {max(1, int(e.at_frac * tcfg.total_steps)): e
+                     for e in sorted(tcfg.expansions, key=lambda e: e.at_frac)}
+
+        # ----- resume or fresh init ----------------------------------------
+        start_step = 0
+        cur_layers = tcfg.source_layers
+        if self.checkpoint_dir:
+            latest = ckpt.latest_step(self.checkpoint_dir)
+            if latest is not None:
+                meta = ckpt.load_metadata(self.checkpoint_dir, latest)
+                cur_layers = int(meta["num_layers"])
+                start_step = latest
+
+        cur_cfg = model_cfg.with_depth(cur_layers)
+        p_sh, os_sh, p_struct, os_struct = self._state_shardings(cur_cfg)
+        if self.checkpoint_dir and start_step > 0:
+            # restore only needs the tree structure (abstract structs), so a
+            # resume never materializes a throwaway fresh init.
+            restored = ckpt.restore(
+                self.checkpoint_dir, start_step,
+                {"params": p_struct, "opt_state": os_struct},
+                shardings={"params": p_sh, "opt_state": os_sh})
+            params, opt_state = restored["params"], restored["opt_state"]
+            self.log_fn(f"[resume] step={start_step} layers={cur_layers}")
+        else:
+            params, opt_state = self._init_state(cur_cfg, p_sh, os_sh)
+
+        train_step, eval_step = self._build_steps(cur_cfg, p_sh, os_sh)
+
+        history = {"step": [], "loss": [], "lr": [], "eval_step": [],
+                   "eval_loss": [], "layers": [], "expansion_steps": [],
+                   "step_time": []}
+        monitor = StragglerMonitor()
+
+        def save(step):
+            if self.checkpoint_dir:
+                ckpt.save(self.checkpoint_dir, step,
+                          {"params": params, "opt_state": opt_state},
+                          metadata={"num_layers": cur_layers,
+                                    "name": model_cfg.name},
+                          keep=tcfg.keep_checkpoints)
+
+        for step in range(start_step, tcfg.total_steps):
+            # ---- depth expansion at τ (paper's technique) ------------------
+            if step in exp_steps and cur_layers < exp_steps[step].target_layers:
+                e = exp_steps[step]
+                save(step)                   # expansion boundary checkpoint
+                expand_fn, p_sh, os_sh = exp.make_expand_fn(
+                    cur_cfg, e.target_layers, e.init, params, opt_state,
+                    insert_at=e.insert_at,
+                    opt_state_policy=e.opt_state_policy, dtype=self.dtype,
+                    mesh=self.mesh, fsdp=self.fsdp, layout=self.layout)
+                key = jax.random.PRNGKey(tcfg.seed + 17 + step)
+                params, opt_state = expand_fn(params, opt_state, key)
+                cur_layers = e.target_layers
+                cur_cfg = model_cfg.with_depth(cur_layers)
+                train_step, eval_step = self._build_steps(cur_cfg, p_sh, os_sh)
+                history["expansion_steps"].append(step)
+                self.log_fn(f"[expand] step={step} -> {cur_layers} layers "
+                            f"({e.init}, OS={e.opt_state_policy})")
+
+            batch = self._place_batch(self.data.batch(step))
+            monitor.start()
+            params, opt_state, metrics = train_step(params, opt_state, batch,
+                                                    jnp.asarray(step))
+            if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
+                loss = float(metrics["loss"])
+                dt, slow = monitor.stop()
+                history["step"].append(step)
+                history["loss"].append(loss)
+                history["lr"].append(float(metrics["lr"]))
+                history["layers"].append(cur_layers)
+                history["step_time"].append(dt)
+                if step % (tcfg.log_every * 10) == 0:
+                    self.log_fn(f"step {step:6d} layers {cur_layers:3d} "
+                                f"loss {loss:.4f} "
+                                f"lr {float(metrics['lr']):.2e}"
+                                + ("  [straggler]" if slow else ""))
+            else:
+                monitor.stop()
+
+            if step and step % tcfg.eval_every == 0:
+                ev = float(np.mean([float(eval_step(params,
+                                                    self._place_batch(b)))
+                                    for b in self.eval_batches]))
+                history["eval_step"].append(step)
+                history["eval_loss"].append(ev)
+
+            if self.checkpoint_dir and step and step % tcfg.checkpoint_every == 0:
+                save(step)
+
+        save(tcfg.total_steps)
+        return TrainResult(history=history, params=params,
+                           opt_state=opt_state, final_layers=cur_layers)

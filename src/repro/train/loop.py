@@ -1,43 +1,22 @@
-"""Progressive training loop — the paper's recipe (§7) as a runnable driver.
+"""Progressive training loop — thin single-device wrapper over the engine.
 
-Implements:  source-model training → (checkpoint) → depth expansion at τ with
-the configured initialization + optimizer-state policy → grown-model training,
-all under one LR schedule and one optimizer (hyperparameter transfer).
-Fault tolerance: atomic checkpoints (incl. at the expansion boundary),
-auto-resume with depth recovery from checkpoint metadata, straggler
-watermarks; expansion re-jits the train step at the new depth.
+Historically this module held the whole training loop; it now delegates to
+``repro.train.engine.ProgressiveTrainer`` running under a degenerate 1x1
+mesh, which takes the *same* sharded code path as a production mesh while
+keeping single-device numerics.  Existing callers (examples, tests, the
+launch CLI) keep working unchanged; pass ``mesh=`` to train sharded.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint import checkpointer as ckpt
-from repro.configs.base import ExpansionConfig, ModelConfig, TrainConfig
-from repro.core import expansion as exp
-from repro.core.schedules import make_schedule
-from repro.data.synthetic import DataConfig, SyntheticLM, make_eval_batches
-from repro.distributed.collectives import StragglerMonitor
-from repro.models import registry
-from repro.optim.base import make_optimizer
-from repro.train import steps as steps_lib
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.synthetic import SyntheticLM
+from repro.train.engine import ProgressiveTrainer, TrainResult
 
-
-@dataclasses.dataclass
-class TrainResult:
-    history: Dict[str, List]
-    params: object
-    opt_state: object
-    final_layers: int
-
-
-def _expansion_schedule(tcfg: TrainConfig):
-    return sorted(tcfg.expansions, key=lambda e: e.at_frac)
+__all__ = ["train", "TrainResult", "ProgressiveTrainer"]
 
 
 def train(model_cfg: ModelConfig, tcfg: TrainConfig,
@@ -45,111 +24,12 @@ def train(model_cfg: ModelConfig, tcfg: TrainConfig,
           data: Optional[SyntheticLM] = None,
           eval_batches=None,
           dtype=jnp.float32,
-          log_fn: Callable = print) -> TrainResult:
+          log_fn: Callable = print,
+          mesh=None) -> TrainResult:
     """Run (possibly progressive) training.  `model_cfg.num_layers` is the
     *target* depth; training starts at `tcfg.source_layers` and follows
-    `tcfg.expansions`."""
-    dcfg = DataConfig(vocab_size=model_cfg.vocab_size, seq_len=tcfg.seq_len,
-                      global_batch=tcfg.global_batch, seed=tcfg.seed)
-    data = data or SyntheticLM(dcfg)
-    if eval_batches is None:
-        eval_batches = make_eval_batches(dcfg, tcfg.eval_batches)
-
-    opt = make_optimizer(tcfg.optimizer)
-    schedule = make_schedule(tcfg.schedule, tcfg.optimizer.learning_rate,
-                             tcfg.total_steps)
-    expansions = _expansion_schedule(tcfg)
-    exp_steps = {max(1, int(e.at_frac * tcfg.total_steps)): e
-                 for e in expansions}
-
-    # ----- resume or fresh init --------------------------------------------
-    start_step = 0
-    cur_layers = tcfg.source_layers
-    if checkpoint_dir:
-        latest = ckpt.latest_step(checkpoint_dir)
-        if latest is not None:
-            meta = ckpt.load_metadata(checkpoint_dir, latest)
-            cur_layers = int(meta["num_layers"])
-            start_step = latest
-
-    cur_cfg = model_cfg.with_depth(cur_layers)
-    api = registry.get_model(cur_cfg)
-    params = api.init(jax.random.PRNGKey(tcfg.seed), cur_cfg, dtype=dtype)
-    opt_state = opt.init(params)
-    if checkpoint_dir and start_step > 0:
-        params = ckpt.restore(checkpoint_dir, start_step,
-                              {"params": params, "opt_state": opt_state})
-        params, opt_state = params["params"], params["opt_state"]
-        log_fn(f"[resume] step={start_step} layers={cur_layers}")
-
-    train_step = steps_lib.make_train_step(cur_cfg, opt, schedule,
-                                           remat=tcfg.remat)
-    eval_step = steps_lib.make_eval_step(cur_cfg)
-
-    history = {"step": [], "loss": [], "lr": [], "eval_step": [],
-               "eval_loss": [], "layers": [], "expansion_steps": [],
-               "step_time": []}
-    monitor = StragglerMonitor()
-
-    def save(step):
-        if checkpoint_dir:
-            ckpt.save(checkpoint_dir, step,
-                      {"params": params, "opt_state": opt_state},
-                      metadata={"num_layers": cur_layers,
-                                "name": model_cfg.name},
-                      keep=tcfg.keep_checkpoints)
-
-    for step in range(start_step, tcfg.total_steps):
-        # ---- depth expansion at τ (paper's technique) ----------------------
-        if step in exp_steps and cur_layers < exp_steps[step].target_layers:
-            e = exp_steps[step]
-            save(step)                       # expansion boundary checkpoint
-            key = jax.random.PRNGKey(tcfg.seed + 17 + step)
-            params = exp.expand_params(params, cur_cfg, e.target_layers,
-                                       e.init, key=key, insert_at=e.insert_at,
-                                       dtype=dtype)
-            opt_state = exp.expand_opt_state(opt_state, params,
-                                             e.opt_state_policy, e.init,
-                                             insert_at=e.insert_at)
-            cur_layers = e.target_layers
-            cur_cfg = model_cfg.with_depth(cur_layers)
-            train_step = steps_lib.make_train_step(cur_cfg, opt, schedule,
-                                                   remat=tcfg.remat)
-            eval_step = steps_lib.make_eval_step(cur_cfg)
-            history["expansion_steps"].append(step)
-            log_fn(f"[expand] step={step} -> {cur_layers} layers "
-                   f"({e.init}, OS={e.opt_state_policy})")
-
-        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
-        monitor.start()
-        params, opt_state, metrics = train_step(params, opt_state, batch,
-                                                jnp.asarray(step))
-        if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
-            loss = float(metrics["loss"])
-            dt, slow = monitor.stop()
-            history["step"].append(step)
-            history["loss"].append(loss)
-            history["lr"].append(float(metrics["lr"]))
-            history["layers"].append(cur_layers)
-            history["step_time"].append(dt)
-            if step % (tcfg.log_every * 10) == 0:
-                log_fn(f"step {step:6d} layers {cur_layers:3d} "
-                       f"loss {loss:.4f} lr {float(metrics['lr']):.2e}"
-                       + ("  [straggler]" if slow else ""))
-        else:
-            monitor.stop()
-
-        if step and step % tcfg.eval_every == 0:
-            ev = float(np.mean([float(eval_step(params,
-                                                {k: jnp.asarray(v) for k, v
-                                                 in b.items()}))
-                                for b in eval_batches]))
-            history["eval_step"].append(step)
-            history["eval_loss"].append(ev)
-
-        if checkpoint_dir and step and step % tcfg.checkpoint_every == 0:
-            save(step)
-
-    save(tcfg.total_steps)
-    return TrainResult(history=history, params=params, opt_state=opt_state,
-                       final_layers=cur_layers)
+    `tcfg.expansions`.  `mesh=None` runs on one device."""
+    return ProgressiveTrainer(model_cfg, tcfg, mesh=mesh,
+                              checkpoint_dir=checkpoint_dir, data=data,
+                              eval_batches=eval_batches, dtype=dtype,
+                              log_fn=log_fn).run()

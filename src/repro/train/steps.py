@@ -1,49 +1,139 @@
-"""Jitted train/eval/serve step builders."""
+"""Jitted train/eval/serve step builders.
+
+All builders optionally take explicit shardings (``StepShardings``): the
+engine resolves per-leaf NamedShardings once and the steps are compiled with
+``in_shardings``/``out_shardings`` so params and optimizer state stay
+resident in their mesh layout across the whole run (donated in, sharded
+out), and batches arrive pre-sharded over the data axis.  Without shardings
+the builders behave exactly as before (single-device jit).
+"""
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
 from repro.optim.base import Optimizer
 
 
+@dataclasses.dataclass(frozen=True)
+class StepShardings:
+    """Resolved NamedSharding pytrees for one model depth."""
+    mesh: object
+    params: object            # pytree matching params
+    opt_state: object         # pytree matching optimizer state
+    batch: object             # pytree matching a global batch
+    replicated: object        # scalar / metrics sharding
+    layout: str = "tp"        # activation layout ('tp' | 'fsdp')
+
+
+def _microbatch(batch, grad_accum: int, shardings: Optional[StepShardings]):
+    """(B, ...) -> (grad_accum, B/grad_accum, ...), keeping the per-microbatch
+    batch dim sharded over the data axes.
+
+    The microbatch sharding is re-resolved from the *microbatch* shape, not
+    inherited from the full batch: B/grad_accum may not divide the DP extent
+    that B did, and batch_shardings' divisibility fallback then picks the
+    largest still-dividing axis subset instead of silently replicating."""
+    def split(x):
+        b = x.shape[0]
+        assert b % grad_accum == 0, (b, grad_accum)
+        return x.reshape((grad_accum, b // grad_accum) + x.shape[1:])
+
+    mb = jax.tree.map(split, batch)
+    if shardings is not None:
+        from repro.distributed import sharding as shd
+        struct = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), mb)
+        micro_sh = shd.batch_shardings(struct, shardings.mesh,
+                                       layout=shardings.layout)
+        mb = jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(shardings.mesh,
+                                 P(*((None,) + tuple(s.spec))))),
+            mb, micro_sh)
+    return mb
+
+
 def make_train_step(cfg: ModelConfig, opt: Optimizer, schedule: Callable,
-                    remat: bool = False, donate: bool = True) -> Callable:
+                    remat: bool = False, donate: bool = True,
+                    grad_accum: int = 1,
+                    shardings: Optional[StepShardings] = None) -> Callable:
     """(params, opt_state, batch, step) -> (params, opt_state, metrics).
 
     The schedule is evaluated *inside* the step from the global step counter,
     so one compiled step serves the whole WSD plateau, and the same schedule
-    object spans the expansion boundary (hyperparameter transfer)."""
+    object spans the expansion boundary (hyperparameter transfer).
+
+    With ``grad_accum > 1`` the global batch is split into `grad_accum`
+    microbatches scanned sequentially with gradient averaging — identical
+    update to the full-batch step, but peak activation memory (and the
+    required per-device batch) shrinks by the accumulation factor."""
     api = registry.get_model(cfg)
+
+    def loss_fn(p, b):
+        return api.loss(p, cfg, b, remat=remat)
 
     def step_fn(params, opt_state, batch, step):
         lr = schedule(step)
+        if grad_accum <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mb = _microbatch(batch, grad_accum, shardings)
 
-        def loss_fn(p):
-            return api.loss(p, cfg, batch, remat=remat)
+            def body(carry, b):
+                g_acc, l_acc, m_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l,
+                        jax.tree.map(jnp.add, m_acc, m)), None
 
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            zeros_g = jax.tree.map(jnp.zeros_like, params)
+            zeros_m = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype),
+                jax.eval_shape(lambda b: loss_fn(params, b)[1],
+                               jax.tree.map(lambda x: x[0], mb)))
+            (grads, loss, metrics), _ = jax.lax.scan(
+                body, (zeros_g, jnp.zeros(()), zeros_m), mb)
+            inv = 1.0 / grad_accum
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss * inv
+            metrics = jax.tree.map(lambda m: m * inv, metrics)
         params, opt_state = opt.update(grads, opt_state, params, lr)
         out = {"loss": loss, "lr": lr, **metrics}
         return params, opt_state, out
 
-    return jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+    donate_argnums = (0, 1) if donate else ()
+    if shardings is None:
+        return jax.jit(step_fn, donate_argnums=donate_argnums)
+    return jax.jit(
+        step_fn,
+        in_shardings=(shardings.params, shardings.opt_state, shardings.batch,
+                      shardings.replicated),
+        out_shardings=(shardings.params, shardings.opt_state,
+                       shardings.replicated),
+        donate_argnums=donate_argnums)
 
 
-def make_eval_step(cfg: ModelConfig) -> Callable:
+def make_eval_step(cfg: ModelConfig,
+                   shardings: Optional[StepShardings] = None) -> Callable:
     api = registry.get_model(cfg)
 
-    @jax.jit
     def eval_step(params, batch):
         loss, metrics = api.loss(params, cfg, batch)
         return metrics["ce"]
 
-    return eval_step
+    if shardings is None:
+        return jax.jit(eval_step)
+    return jax.jit(eval_step,
+                   in_shardings=(shardings.params, shardings.batch),
+                   out_shardings=shardings.replicated)
 
 
 def make_decode_step(cfg: ModelConfig, donate_cache: bool = True) -> Callable:

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Canonical tier-1 test entrypoint (olmax-style).
+#
+#   bash test.sh                      # full suite
+#   bash test.sh tests/test_core.py   # one module
+#
+# 8 fake CPU devices so the sharded train engine and the multi-device tests
+# (tests/test_distributed.py) exercise real GSPMD partitioning hermetically.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+# https://github.com/tensorflow/tensorflow/blob/master/tensorflow/compiler/xla/xla.proto
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export JAX_THREEFRY_PARTITIONABLE="${JAX_THREEFRY_PARTITIONABLE:-true}"
+export TF_CPP_MIN_LOG_LEVEL=4   # no backend chatter
+export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -q "$@"

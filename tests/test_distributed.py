@@ -1,0 +1,186 @@
+"""Multi-device tests on 8 fake CPU devices (XLA_FLAGS set in conftest.py).
+
+The mesh-sharded ProgressiveTrainer must be a *numerical no-op* relative to
+single-device training: same data, same schedule, same expansion — loss
+trajectories match within float tolerance.  Expansion must execute jitted
+under the mesh (no host transfer of block stacks), remain function-
+preserving for the zero/copying_zeroL inits, and checkpoints must round-trip
+across different mesh shapes (elastic restore).
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.configs.base import (ExpansionConfig, ModelConfig, OptimizerConfig,
+                                ScheduleConfig, TrainConfig)
+from repro.core import expansion as exp
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.distributed import sharding as shd
+from repro.launch import mesh as mesh_lib
+from repro.models import registry
+from repro.optim.base import make_optimizer
+from repro.train.engine import ProgressiveTrainer
+
+CFG = ModelConfig(name="dist", family="dense", num_layers=4, d_model=32,
+                  num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                  max_seq_len=32)
+
+
+def tcfg(**kw):
+    base = dict(total_steps=12, seq_len=16, global_batch=16, source_layers=1,
+                optimizer=OptimizerConfig(name="adamw", learning_rate=0.01),
+                schedule=ScheduleConfig(name="wsd"),
+                expansions=(ExpansionConfig(at_frac=0.5, target_layers=2,
+                                            init="random"),),
+                eval_every=10_000, checkpoint_every=10_000, log_every=1)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def mesh42():
+    return mesh_lib.make_train_mesh("4x2")
+
+
+def test_fake_devices_present():
+    assert len(jax.devices()) == 8, \
+        "conftest must set --xla_force_host_platform_device_count=8 " \
+        "before jax import"
+
+
+def _run(mesh, **kw):
+    return ProgressiveTrainer(CFG, tcfg(**kw), mesh=mesh,
+                              log_fn=lambda *a: None).run()
+
+
+def test_sharded_matches_single_device_through_expansion():
+    """FSDP+TP run == single-device run, step for step, across τ."""
+    single = _run(mesh_lib.single_device_mesh())
+    sharded = _run(mesh42())
+    assert single.history["expansion_steps"] == \
+        sharded.history["expansion_steps"] == [6]
+    assert sharded.final_layers == 2
+    np.testing.assert_allclose(sharded.history["loss"],
+                               single.history["loss"], rtol=0, atol=1e-4)
+    # params stayed in their mesh layout (engine contract: no host round-trip)
+    blocks = jax.tree.leaves(sharded.params["blocks"])
+    assert all(b.sharding.mesh == sharded.params["embed"].sharding.mesh
+               for b in blocks)
+
+
+def test_grad_accum_decouples_global_batch():
+    """global_batch=16 as 2 microbatches of 8 == one full batch, on the mesh."""
+    full = _run(mesh42())
+    accum = _run(mesh42(), grad_accum=2)
+    np.testing.assert_allclose(accum.history["loss"], full.history["loss"],
+                               rtol=0, atol=1e-4)
+
+
+def _sharded_state(cfg, mesh, opt_name="adamw", seed=0):
+    api = registry.get_model(cfg)
+    opt = make_optimizer(OptimizerConfig(name=opt_name))
+    p_struct = jax.eval_shape(lambda k: api.init(k, cfg),
+                              jax.random.PRNGKey(seed))
+    p_sh = shd.params_shardings(p_struct, mesh)
+    params = jax.jit(lambda k: api.init(k, cfg),
+                     out_shardings=p_sh)(jax.random.PRNGKey(seed))
+    os_sh = shd.opt_state_shardings(jax.eval_shape(opt.init, p_struct), mesh)
+    opt_state = jax.jit(opt.init, out_shardings=os_sh)(params)
+    return params, opt_state, p_sh, os_sh
+
+
+def test_expansion_jitted_on_mesh_no_host_transfer():
+    """Expansion is one jitted call: block stacks never leave the devices,
+    and the expanded leaves come back in their mesh layout at depth 4."""
+    mesh = mesh42()
+    cfg2 = CFG.with_depth(2)
+    params, opt_state, _, _ = _sharded_state(cfg2, mesh)
+    expand_fn, p_sh, os_sh = exp.make_expand_fn(
+        cfg2, 4, "copying_stack", params, opt_state,
+        opt_state_policy="inherit", mesh=mesh)
+    key = jax.random.PRNGKey(1)
+    with jax.transfer_guard_device_to_host("disallow"):
+        new_p, new_os = expand_fn(params, opt_state, key)
+        jax.block_until_ready((new_p, new_os))
+    assert jax.tree.leaves(new_p["blocks"])[0].shape[0] == 4
+    # every leaf landed with the sharding the rules assign at the new depth
+    jax.tree.map(lambda x, s: None if x.sharding == s else
+                 pytest.fail(f"{x.sharding} != {s}"), new_p, p_sh)
+    jax.tree.map(lambda x, s: None if x.sharding == s else
+                 pytest.fail(f"{x.sharding} != {s}"), new_os, os_sh)
+
+
+@pytest.mark.parametrize("method", ["zero", "copying_zeroL"])
+def test_function_preserving_expansion_under_sharding(method):
+    """zero / copying_zeroL expanded models produce identical logits on the
+    mesh (paper §3.1: the new blocks are exact identities at init)."""
+    mesh = mesh42()
+    cfg2 = CFG.with_depth(2)
+    cfg4 = CFG.with_depth(4)
+    params, opt_state, _, _ = _sharded_state(cfg2, mesh)
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, CFG.vocab_size, (4, 16)))
+
+    def logits(cfg, p):
+        api = registry.get_model(cfg)
+        return np.asarray(jax.jit(
+            functools.partial(api.apply, cfg=cfg))(p, batch={"tokens": tokens}))
+
+    before = logits(cfg2, params)
+    expand_fn, _, _ = exp.make_expand_fn(cfg2, 4, method, params, opt_state,
+                                         mesh=mesh)
+    new_p, _ = expand_fn(params, opt_state, jax.random.PRNGKey(2))
+    after = logits(cfg4, new_p)
+    np.testing.assert_allclose(after, before, rtol=0, atol=1e-5)
+
+
+@pytest.mark.parametrize("policy", ["inherit", "copy", "reset"])
+def test_expand_opt_state_matches_params_all_policies(policy):
+    """expand_opt_state output shapes and shardings mirror the expanded
+    params for every optimizer-state policy."""
+    mesh = mesh42()
+    cfg2 = CFG.with_depth(2)
+    params, opt_state, _, _ = _sharded_state(cfg2, mesh)
+    expand_fn, p_sh, os_sh = exp.make_expand_fn(
+        cfg2, 4, "copying_stack", params, opt_state,
+        opt_state_policy=policy, mesh=mesh)
+    new_p, new_os = expand_fn(params, opt_state, jax.random.PRNGKey(3))
+    for moment in ("m", "v"):
+        assert jax.tree.structure(new_os[moment]) == \
+            jax.tree.structure(new_p)
+        jax.tree.map(lambda o, p: np.testing.assert_array_equal(
+            o.shape, p.shape), new_os[moment], new_p)
+        jax.tree.map(lambda o, p: None if o.sharding == p.sharding else
+                     pytest.fail(f"{o.sharding} != {p.sharding}"),
+                     new_os[moment], new_p)
+    if policy == "reset":
+        assert all(float(jnp.abs(x).max()) == 0.0
+                   for x in jax.tree.leaves(new_os["m"]))
+
+
+def test_sharded_checkpoint_roundtrip_different_mesh(tmp_path):
+    """Save under the 8-device (4,2) mesh, restore under a 4-device (2,2)
+    mesh: elastic re-shard, exact tree equality."""
+    mesh8 = mesh42()
+    cfg2 = CFG.with_depth(2)
+    params, opt_state, _, _ = _sharded_state(cfg2, mesh8)
+    tree = {"params": params, "opt_state": opt_state}
+    ckpt.save(str(tmp_path), 7, tree, metadata={"num_layers": 2})
+
+    mesh4 = mesh_lib.make_mesh((2, 2), ("data", "model"),
+                               devices=jax.devices()[:4])
+    p_struct = jax.eval_shape(lambda t: t, params)
+    sh4 = {"params": shd.params_shardings(p_struct, mesh4),
+           "opt_state": shd.opt_state_shardings(
+               jax.eval_shape(lambda t: t, opt_state), mesh4)}
+    like = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), tree)
+    back = ckpt.restore(str(tmp_path), 7, like, shardings=sh4)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), back, tree)
+    assert all(x.sharding.mesh == mesh4
+               for x in jax.tree.leaves(back["params"]))
+    assert ckpt.load_metadata(str(tmp_path), 7)["num_layers"] == 2

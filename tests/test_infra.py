@@ -12,6 +12,7 @@ from repro.configs.base import ModelConfig, OptimizerConfig
 from repro.data.synthetic import DataConfig, SyntheticLM, make_eval_batches
 from repro.distributed import collectives as coll
 from repro.distributed import sharding as shd
+from repro.launch import mesh as mesh_lib
 from repro.optim.base import global_norm, make_optimizer
 
 
@@ -52,8 +53,7 @@ def test_elastic_restore_reshards(tmp_path):
     """Restore with explicit shardings (re-shard on a different topology)."""
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     ckpt.save(str(tmp_path), 1, tree)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = mesh_lib.make_mesh((1, 1), ("data", "model"))
     sh = {"w": jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec(None, None))}
     back = ckpt.restore(str(tmp_path), 1, jax.tree.map(jnp.zeros_like, tree),
@@ -182,8 +182,7 @@ def test_int8_compression_error_feedback():
 # ---------------------------------------------------------------------------
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return mesh_lib.make_mesh((1, 1), ("data", "model"))
 
 
 def test_param_specs_shapes():
