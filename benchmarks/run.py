@@ -6,11 +6,22 @@
 Each benchmark reproduces the corresponding paper artifact at CPU scale on
 the deterministic synthetic corpus (DESIGN.md §7 documents the scale
 substitution); the large-scale shapes are covered by the dry-run/roofline
-pipeline, not here.
+pipeline, not here.  ``--only serve`` additionally writes
+``BENCH_serve.json`` (prefill/decode tokens/s, single vs 8-device mesh).
 """
 from __future__ import annotations
 
+import os
+import sys
+
+# Support both `python -m benchmarks.run` and `python benchmarks/run.py`.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 import argparse
+import json
 import time
 
 
@@ -216,6 +227,71 @@ def bench_kernels(fast=False):
     _row("kernel/mamba_scan_ref_256", us, f"dstate={N}")
 
 
+# ---------------------------------------------------------------------------
+# Serving: prefill/decode throughput, single device vs 8-device mesh
+# ---------------------------------------------------------------------------
+
+def bench_serve(fast=False):
+    # 8 fake CPU devices (same harness as test.sh) so the mesh layout is a
+    # real 8-way data-parallel decode.  Only possible if jax hasn't been
+    # initialized yet (i.e. `--only serve`); when other benches ran first,
+    # the environment — and their recorded baselines — stay untouched and
+    # the mesh layout degrades to however many devices exist.
+    if "jax" not in sys.modules:
+        if "--xla_force_host_platform_device_count" not in \
+                os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count=8 "
+                + os.environ.get("XLA_FLAGS", "")).strip()
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        os.environ.setdefault("JAX_THREEFRY_PARTITIONABLE", "true")
+    import jax
+    import numpy as np
+    from benchmarks.common import TINY
+    from repro.launch import mesh as mesh_lib
+    from repro.models import registry
+    from repro.train.serve_engine import ServeEngine
+
+    B, P = 8, 32
+    G = 16 if fast else 32
+    api = registry.get_model(TINY)
+    params = api.init(jax.random.PRNGKey(0), TINY)
+    prompts = np.random.default_rng(0).integers(
+        0, TINY.vocab_size, (B, P)).astype(np.int32)
+
+    n_dev = len(jax.devices())
+    meshes = {"single": mesh_lib.single_device_mesh()}
+    if n_dev > 1:
+        meshes[f"mesh{n_dev}"] = mesh_lib.make_train_mesh("host")
+    out = {"batch": B, "prompt_len": P, "gen": G, "arch": TINY.name,
+           "layouts": {}}
+    for name, mesh in meshes.items():
+        eng = ServeEngine(TINY, params, mesh=mesh, max_len=P + G + 1)
+        eng.generate(prompts, 2)                                   # compile
+        res = eng.generate(prompts, G)
+        pf = B * P / max(res.prefill_s, 1e-9)
+        dec = B * max(res.steps - 1, 1) / max(res.decode_s, 1e-9)
+        out["layouts"][name] = {"prefill_tok_s": pf, "decode_tok_s": dec,
+                                "prefill_s": res.prefill_s,
+                                "decode_s": res.decode_s}
+        _row(f"serve/{name}_prefill", res.prefill_s * 1e6,
+             f"tokens_per_s={pf:.1f}")
+        _row(f"serve/{name}_decode",
+             res.decode_s * 1e6 / max(res.steps - 1, 1),
+             f"tokens_per_s={dec:.1f}")
+    if n_dev > 1:
+        with open("BENCH_serve.json", "w") as f:
+            json.dump(out, f, indent=1)
+        print("# wrote BENCH_serve.json", flush=True)
+    else:
+        # jax was initialized by an earlier bench without the fake-device
+        # flag: a 1-device "mesh" layout would just duplicate "single" —
+        # don't clobber the real artifact from a `--only serve` run.
+        print("# single device only (jax initialized before bench_serve); "
+              "BENCH_serve.json left untouched — run `--only serve` for the "
+              "mesh layout", flush=True)
+
+
 BENCHES = {
     "expansion_init": bench_expansion_init,
     "copying_variants": bench_copying_variants,
@@ -226,6 +302,8 @@ BENCHES = {
     "mup_transfer": bench_mup_transfer,
     "theory": bench_theory,
     "kernels": bench_kernels,
+    # last: mutates the jax environment when it runs first (`--only serve`)
+    "serve": bench_serve,
 }
 
 

@@ -43,5 +43,7 @@ t0 = time.perf_counter()
 out = gen.generate(prompts, args.gen, temperature=0.8, seed=1)
 dt = time.perf_counter() - t0
 print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
-      f"({args.batch * args.gen / dt:.1f} tok/s incl. prefill)")
+      f"(prefill {out.prefill_tokens} tok in one forward: "
+      f"{args.batch * out.prefill_tokens / max(out.prefill_s, 1e-9):.0f} tok/s; "
+      f"decode {args.batch * max(out.steps - 1, 0) / max(out.decode_s, 1e-9):.0f} tok/s)")
 print("sample:", out.tokens[0].tolist())

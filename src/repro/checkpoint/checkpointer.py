@@ -51,10 +51,16 @@ def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None,
     leaves, treedef = _flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(jax.device_get(x)) for i, x in enumerate(leaves)}
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
     manifest = {
         "step": step,
         "num_leaves": len(leaves),
         "treedef": str(treedef),
+        # Per-leaf keypaths: lets a consumer restore a *subtree* (e.g. the
+        # serving CLI pulls 'params' without reconstructing the optimizer
+        # state's structure) — see restore_subtree.
+        "paths": paths,
         # Per-leaf source layout, for post-mortem debugging only: leaves are
         # stored gathered, so restore is free to re-shard onto any mesh.
         "shardings": [_spec_str(x) for x in leaves],
@@ -105,6 +111,49 @@ def restore(directory: str, step: int, like: Any, shardings: Any = None) -> Any:
     assert manifest["num_leaves"] == len(leaves), \
         f"checkpoint has {manifest['num_leaves']} leaves, expected {len(leaves)}"
     new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree
+
+
+def restore_subtree(directory: str, step: int, like: Any, prefix: str,
+                    shardings: Any = None) -> Any:
+    """Restore one top-level subtree (e.g. ``'params'``) of a checkpoint.
+
+    ``like`` gives the structure of the subtree alone (arrays or
+    ShapeDtypeStructs); leaves are matched by the keypaths recorded in the
+    manifest, so the caller never reconstructs sibling subtrees (a serving
+    process restores params without knowing the optimizer-state layout).
+    With ``shardings`` the leaves are device_put sharded (elastic re-shard
+    onto the restoring mesh, as in :func:`restore`).
+    """
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths = manifest.get("paths")
+    if paths is None:
+        raise ValueError(f"{path}: checkpoint predates keypath manifests; "
+                         "use restore() with the full tree structure")
+    index = {p: i for i, p in enumerate(paths)}
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    head = jax.tree_util.keystr((jax.tree_util.DictKey(prefix),))
+    new_leaves = []
+    for keypath, like_leaf in flat:
+        key = head + jax.tree_util.keystr(keypath)
+        if key not in index:
+            raise KeyError(f"{path}: no leaf {key!r} in checkpoint "
+                           f"(subtree {prefix!r})")
+        leaf = data[f"leaf_{index[key]}"]
+        want = (getattr(like_leaf, "shape", None),
+                getattr(like_leaf, "dtype", None))
+        if want[0] is not None and tuple(leaf.shape) != tuple(want[0]):
+            raise ValueError(
+                f"{path}: leaf {key!r} has shape {leaf.shape}, caller "
+                f"expects {tuple(want[0])} — config/depth mismatch between "
+                "the checkpoint and the requested model")
+        new_leaves.append(leaf)
     tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
     if shardings is not None:
         tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)

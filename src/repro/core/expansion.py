@@ -185,7 +185,8 @@ def expand_params(params, cfg: ModelConfig, target_layers: int, method: str,
 def make_expand_fn(cfg: ModelConfig, target_layers: int, method: str,
                    params, opt_state, insert_at: str = "bottom",
                    opt_state_policy: str = "inherit", dtype=jnp.float32,
-                   mesh=None, fsdp: bool = True, layout: str = "tp"):
+                   mesh=None, fsdp: bool = True, layout: str = "tp",
+                   moe_fsdp: str = "auto"):
     """Build a jitted ``(params, opt_state, key) -> (params, opt_state)``
     whole-model depth expansion for state shaped like `params`/`opt_state`
     (arrays or ShapeDtypeStructs — only shapes/dtypes are read here).
@@ -212,8 +213,10 @@ def make_expand_fn(cfg: ModelConfig, target_layers: int, method: str,
     from repro.distributed import sharding as shd
     p_struct, os_struct = jax.eval_shape(expand_fn, params, opt_state,
                                          jax.random.PRNGKey(0))
-    p_sh = shd.params_shardings(p_struct, mesh, fsdp=fsdp, layout=layout)
-    os_sh = shd.opt_state_shardings(os_struct, mesh, fsdp=fsdp, layout=layout)
+    p_sh = shd.params_shardings(p_struct, mesh, fsdp=fsdp, moe_fsdp=moe_fsdp,
+                                layout=layout)
+    os_sh = shd.opt_state_shardings(os_struct, mesh, fsdp=fsdp,
+                                    moe_fsdp=moe_fsdp, layout=layout)
     return jax.jit(expand_fn, out_shardings=(p_sh, os_sh)), p_sh, os_sh
 
 

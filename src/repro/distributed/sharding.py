@@ -189,7 +189,8 @@ def cache_shardings(cache_specs, mesh: Mesh):
     def one(leaf):
         shape = leaf.shape
         axes: list = [None] * len(shape)
-        if len(shape) >= 2 and shape[1] % dp_total == 0 and shape[1] >= dp_total:
+        if dp and len(shape) >= 2 and shape[1] % dp_total == 0 \
+                and shape[1] >= dp_total:
             axes[1] = dp                       # batch dim (after n_super)
         if "model" in sizes:
             # longest unsharded dim after batch

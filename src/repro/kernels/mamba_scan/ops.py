@@ -23,3 +23,15 @@ def selective_scan(u, dt, A, Bm, Cm, Dp, *, force: str = "auto"):
         return y
     y, _ = selective_scan_chunked(u, dt, A, Bm, Cm, Dp)
     return y
+
+
+def selective_scan_with_state(u, dt, A, Bm, Cm, Dp, h0=None):
+    """Returns (y (B,S,d_inner), h_final (B,d_inner,N)) — the serve prefill
+    path: one full-sequence scan whose final recurrent state seeds decode.
+
+    Always takes the exact jnp forms (the Pallas kernel keeps its state in
+    VMEM scratch and never emits it); chunked for S >= 64, per-step below.
+    """
+    if u.shape[1] < 64:
+        return selective_scan_ref(u, dt, A, Bm, Cm, Dp, h0=h0)
+    return selective_scan_chunked(u, dt, A, Bm, Cm, Dp, h0=h0)

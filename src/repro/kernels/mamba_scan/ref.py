@@ -40,7 +40,7 @@ def selective_scan_ref(u, dt, A, Bm, Cm, Dp, h0=None):
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
-def selective_scan_chunked(u, dt, A, Bm, Cm, Dp, chunk: int = 128):
+def selective_scan_chunked(u, dt, A, Bm, Cm, Dp, chunk: int = 128, h0=None):
     """Exact chunked form (§Perf h1): outer scan over S/chunk chunks, inner
     associative scan within each chunk.
 
@@ -78,7 +78,8 @@ def selective_scan_chunked(u, dt, A, Bm, Cm, Dp, chunk: int = 128):
         y = jnp.einsum("bcdn,bcn->bcd", h_seq, C_t)
         return h_seq[:, -1], y
 
-    h = jnp.zeros((B, d, N), jnp.float32)
+    h = jnp.zeros((B, d, N), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
     h, ys = jax.lax.scan(per_chunk, h, (uc, dtc, Bc, Cc))
     y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d) \
         + Dp.astype(jnp.float32) * u.astype(jnp.float32)

@@ -1,25 +1,67 @@
-"""Serving CLI: batched greedy/temperature generation with a KV cache.
+"""Serving CLI: mesh-sharded batched generation (true prefill + donated
+sharded caches) over ``repro.train.serve_engine.ServeEngine``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2-12l --smoke \
-        --batch 4 --prompt-len 16 --gen 32
+        --batch 4 --prompt-len 16 --gen 32 --mesh single
+
+``--mesh`` picks the device layout (same specs as ``launch/train.py``):
+
+    single          1x1 over the first device (default; exact single-device)
+    host            all local devices on 'data' (batch-parallel decode)
+    prod            the 256-chip (data, model) production mesh
+    prod-multipod   the 512-chip multi-pod mesh
+    AxB             explicit (data, model) shape, e.g. '4x2' on 8 devices
+
+``--checkpoint DIR`` serves a ``ProgressiveTrainer`` checkpoint: the params
+subtree is restored at the depth recorded in the checkpoint manifest (so a
+depth-expanded model serves at its grown depth) and the engine places it
+sharded onto the serve mesh — no optimizer state is touched.
+Prefill and decode throughput are reported separately: prefill is one
+compiled full-sequence forward, decode is one fused device step per token.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro import configs as cfglib
+from repro.checkpoint import checkpointer as ckpt
+from repro.launch import mesh as mesh_lib
 from repro.models import registry
-from repro.train.serve_lib import Generator
+from repro.train.serve_engine import ServeEngine
+
+
+def load_params(checkpoint_dir: str, cfg, step=None, dtype=None):
+    """(params (host arrays), cfg-at-checkpoint-depth) from a
+    ProgressiveTrainer checkpoint.  Placement is left to ``ServeEngine``,
+    which resolves the serve-mesh shardings once — restoring sharded here
+    would just re-shard a second time at engine construction."""
+    if step is None:
+        step = ckpt.latest_step(checkpoint_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {checkpoint_dir}")
+    meta = ckpt.load_metadata(checkpoint_dir, step)
+    cfg = cfg.with_depth(int(meta["num_layers"]))
+    api = registry.get_model(cfg)
+    kwargs = {} if dtype is None else {"dtype": dtype}
+    p_struct = jax.eval_shape(lambda k: api.init(k, cfg, **kwargs),
+                              jax.random.PRNGKey(0))
+    params = ckpt.restore_subtree(checkpoint_dir, step, p_struct, "params")
+    return params, cfg
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-12l")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="single",
+                    help="single|host|prod|prod-multipod|AxB")
+    ap.add_argument("--checkpoint", default=None,
+                    help="ProgressiveTrainer checkpoint dir to serve")
+    ap.add_argument("--step", type=int, default=None,
+                    help="checkpoint step (default: latest)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
@@ -29,18 +71,26 @@ def main(argv=None):
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
-    api = registry.get_model(cfg)
-    params = api.init(jax.random.PRNGKey(args.seed), cfg)
+    mesh = mesh_lib.make_train_mesh(args.mesh)
+    if args.checkpoint:
+        params, cfg = load_params(args.checkpoint, cfg, step=args.step)
+    else:
+        api = registry.get_model(cfg)
+        params = api.init(jax.random.PRNGKey(args.seed), cfg)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)
-    gen = Generator(cfg, params, max_len=args.prompt_len + args.gen + 1)
-    t0 = time.perf_counter()
-    res = gen.generate(prompts, args.gen, temperature=args.temperature,
-                       seed=args.seed)
-    dt = time.perf_counter() - t0
-    print(f"arch={cfg.name} batch={args.batch} steps={res.steps} "
-          f"tokens/s={args.batch * res.steps / dt:.1f}")
+    engine = ServeEngine(cfg, params, mesh=mesh,
+                         max_len=args.prompt_len + max(args.gen, 1) + 1)
+    warmup = min(2, max(args.gen, 1))                           # compile
+    engine.generate(prompts, warmup, temperature=args.temperature)
+    res = engine.generate(prompts, max(args.gen, 1),
+                          temperature=args.temperature, seed=args.seed)
+    pf = args.batch * res.prefill_tokens / max(res.prefill_s, 1e-9)
+    dec = args.batch * max(res.steps - 1, 0) / max(res.decode_s, 1e-9)
+    print(f"arch={cfg.name} layers={cfg.num_layers} mesh={args.mesh} "
+          f"batch={args.batch} decode_steps={res.steps}")
+    print(f"prefill tokens/s={pf:.1f}  decode tokens/s={dec:.1f}")
     print("sample:", res.tokens[0, :24].tolist())
 
 

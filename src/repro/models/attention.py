@@ -104,21 +104,59 @@ def _position_encode(cfg: ModelConfig, q, k, positions):
 # ---------------------------------------------------------------------------
 
 def attn_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
-               window: int, causal: bool = True) -> jax.Array:
-    """x: (B, S, D) -> (B, S, D)."""
+               window: int, causal: bool = True, cache=None):
+    """x: (B, S, D) -> (B, S, D).
+
+    With ``cache`` (serve prefill) the decode cache is filled alongside the
+    forward — the same post-RoPE/QK-norm keys and values (pre-RoPE latents
+    for MLA) ``attn_decode`` would have written token by token — and the
+    return becomes ``(out, new_cache)``.  One code path for train, prefill
+    and parity tests: the cache fill cannot drift from the forward."""
     from repro.kernels.flash_attention import ops as fa_ops
-    q, k, v, _ = _project_qkv(p, cfg, x)
+    q, k, v, latent = _project_qkv(p, cfg, x)
     q, k = _qk_norm(p, cfg, q, k)
     q, k = _position_encode(cfg, q, k, positions)
     q = maybe_shard(q, P(("pod", "data"), None, "model", None))
     k = maybe_shard(k, P(("pod", "data"), None, "model", None))
     v = maybe_shard(v, P(("pod", "data"), None, "model", None))
+    new_cache = None
+    if cache is not None:
+        if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+            new_cache = {"latent": _fill_cache(cache["latent"], latent)}
+        else:
+            new_cache = {"k": _fill_cache(cache["k"], k),
+                         "v": _fill_cache(cache["v"], v)}
     out = fa_ops.flash_attention(
         q, k, v, causal=causal, window=window,
         logit_softcap=cfg.attn_logit_softcap)
     out = out.reshape(out.shape[:2] + (cfg.q_dim,))
     out = out @ p["wo"]
-    return maybe_shard(out, P(("pod", "data"), "model", None))
+    out = maybe_shard(out, P(("pod", "data"), "model", None))
+    return (out, new_cache) if cache is not None else out
+
+
+def _fill_cache(buf: jax.Array, new: jax.Array) -> jax.Array:
+    """Write a full prefill sequence into a decode cache buffer.
+
+    buf: (B, Sc, ...) preallocated cache; new: (B, S, ...) per-token values
+    at absolute positions 0..S-1.  For S <= Sc this is one dynamic update at
+    slot 0; for a ring buffer (sliding window, Sc < S) each slot s keeps the
+    *last* token that maps to it (t ≡ s mod Sc), via a deterministic gather —
+    exactly the state a token-by-token decode of the same prompt leaves.
+    """
+    S, Sc = new.shape[1], buf.shape[1]
+    if S <= Sc:
+        return jax.lax.dynamic_update_slice(
+            buf, new.astype(buf.dtype), (0,) * buf.ndim)
+    slots = jnp.arange(Sc)
+    last = S - 1 - ((S - 1 - slots) % Sc)
+    return new[:, last].astype(buf.dtype)
+
+
+def attn_prefill(p, cfg: ModelConfig, x: jax.Array, cache,
+                 positions: jax.Array, window: int):
+    """Prefill = ``attn_apply`` with the cache filled; see there."""
+    return attn_apply(p, cfg, x, positions, window, cache=cache)
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,11 @@ class ModelApi:
     apply: Callable       # (params, cfg, batch) -> logits
     init_cache: Callable  # (params, cfg, batch_size, max_len, dtype) -> cache
     decode_step: Callable  # (params, cfg, tokens, cache, index) -> (logits, cache)
+    # Full-sequence prefill that also fills the decode cache (one compiled
+    # forward, not a token loop): (params, cfg, tokens, cache) ->
+    # (logits (B,S,V), cache).  None for archs without a prefill path yet
+    # (encoder-decoder).
+    prefill: Optional[Callable] = None
 
 
 def _lm_loss(params, cfg, batch, remat=False):
@@ -61,7 +66,8 @@ def get_model(cfg: ModelConfig) -> ModelApi:
                         decode_step=encdec.encdec_decode_step)
     return ModelApi(init=transformer.lm_init, loss=_lm_loss, apply=_lm_apply,
                     init_cache=transformer.lm_init_cache,
-                    decode_step=transformer.lm_decode_step)
+                    decode_step=transformer.lm_decode_step,
+                    prefill=transformer.lm_prefill)
 
 
 # ---------------------------------------------------------------------------

@@ -67,21 +67,39 @@ def _mamba_ssm_params(p, cfg, u):
     return dt, Bm, Cm
 
 
-def mamba_apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
-    """Full-sequence Mamba block. x: (B, S, D) -> (B, S, D)."""
+def mamba_apply(p, cfg: ModelConfig, x: jax.Array, state=None):
+    """Full-sequence Mamba block. x: (B, S, D) -> (B, S, D).
+
+    With ``state`` (serve prefill) the incoming conv/ssm state replaces the
+    zero left-context, the exact state-returning scan is used, and the
+    return becomes ``(y, new_state)`` — the state a token-by-token decode of
+    the same sequence would leave.  One code path: the prefill handoff
+    cannot drift from the train forward."""
     from repro.kernels.mamba_scan import ops as scan_ops
     B, S, D = x.shape
     d_inner, dt_rank, d_state, d_conv = mamba_dims(cfg)
     xs, z = _mamba_project(p, cfg, x)
-    # Depthwise causal conv over time.
-    pad = jnp.pad(xs, ((0, 0), (d_conv - 1, 0), (0, 0)))
-    u = sum(pad[:, i:i + S, :] * p["conv_w"][i] for i in range(d_conv))
+    # Depthwise causal conv over time (left context: zeros, or the state's).
+    if state is None:
+        ctx = jnp.pad(xs, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+    u = sum(ctx[:, i:i + S, :] * p["conv_w"][i] for i in range(d_conv))
     u = jax.nn.silu(u + p["conv_b"])
     dt, Bm, Cm = _mamba_ssm_params(p, cfg, u)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (d_inner, d_state)
-    y = scan_ops.selective_scan(u, dt, A, Bm, Cm, p["D"])
-    y = y * jax.nn.silu(z)
-    return y @ p["out_proj"]
+    if state is None:
+        y = scan_ops.selective_scan(u, dt, A, Bm, Cm, p["D"])
+        return (y * jax.nn.silu(z)) @ p["out_proj"]
+    y, h = scan_ops.selective_scan_with_state(u, dt, A, Bm, Cm, p["D"],
+                                              h0=state["ssm"])
+    new_state = {"conv": ctx[:, S:].astype(state["conv"].dtype), "ssm": h}
+    return (y * jax.nn.silu(z)) @ p["out_proj"], new_state
+
+
+def mamba_prefill(p, cfg: ModelConfig, x: jax.Array, state) -> Tuple[jax.Array, dict]:
+    """Prefill = ``mamba_apply`` advancing the decode state; see there."""
+    return mamba_apply(p, cfg, x, state=state)
 
 
 def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
@@ -170,13 +188,17 @@ def _rwkv_streams(p, x, prev):
     return r, k, v, g, w
 
 
-def rwkv_time_mix(p, cfg: ModelConfig, x: jax.Array,
-                  state=None) -> Tuple[jax.Array, jax.Array]:
-    """x: (B,S,D) -> (B,S,D).  state: (B,H,hd,hd) or None (zeros)."""
+def rwkv_time_mix(p, cfg: ModelConfig, x: jax.Array, state=None,
+                  x_prev=None, return_state: bool = False):
+    """x: (B,S,D) -> (B,S,D).  state: WKV matrix (B,H,hd,hd) or None
+    (zeros); x_prev: (B,D) last pre-mix input for token shift (serve
+    prefill continuation).  ``return_state=True`` also returns the final
+    WKV state — one code path for train and prefill."""
     from repro.kernels.rwkv6 import ops as rwkv_ops
     B, S, D = x.shape
     H, hd = rwkv_dims(cfg)
-    prev = _token_shift(x)
+    prev = _token_shift(x, None if x_prev is None
+                        else x_prev.astype(x.dtype))
     r, k, v, g, w = _rwkv_streams(p, x, prev)
     rh = r.reshape(B, S, H, hd)
     kh = k.reshape(B, S, H, hd)
@@ -184,20 +206,40 @@ def rwkv_time_mix(p, cfg: ModelConfig, x: jax.Array,
     wh = w.reshape(B, S, H, hd)
     if state is None:
         state = jnp.zeros((B, H, hd, hd), jnp.float32)
-    y, _ = rwkv_ops.wkv(rh, kh, vh, wh, p["u"], state)
+    y, state_f = rwkv_ops.wkv(rh, kh, vh, wh, p["u"], state)
     y = y.reshape(B, S, D)
     y = apply_norm(p["ln_x"], y, "layernorm")
     y = y * jax.nn.silu(g)
-    return y @ p["w_o"]
+    out = y @ p["w_o"]
+    return (out, state_f) if return_state else out
 
 
-def rwkv_channel_mix(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
-    prev = _token_shift(x)
+def rwkv_channel_mix(p, cfg: ModelConfig, x: jax.Array,
+                     x_prev=None) -> jax.Array:
+    prev = _token_shift(x, None if x_prev is None
+                        else x_prev.astype(x.dtype))
     xr = x + (prev - x) * p["cm_mu"]["r"]
     xk = x + (prev - x) * p["cm_mu"]["k"]
     r = jax.nn.sigmoid(xr @ p["cm_r"])
     k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
     return r * (k @ p["cm_v"])
+
+
+def rwkv_time_mix_prefill(p, cfg: ModelConfig, x: jax.Array,
+                          state) -> Tuple[jax.Array, dict]:
+    """Prefill = ``rwkv_time_mix`` seeded from and advancing the decode
+    state dict (token shift from tm_x, WKV recurrence from wkv)."""
+    y, state_f = rwkv_time_mix(p, cfg, x, state=state["wkv"],
+                               x_prev=state["tm_x"], return_state=True)
+    return y, {**state, "tm_x": x[:, -1].astype(state["tm_x"].dtype),
+               "wkv": state_f}
+
+
+def rwkv_channel_mix_prefill(p, cfg: ModelConfig, x: jax.Array,
+                             state) -> Tuple[jax.Array, dict]:
+    """Prefill = ``rwkv_channel_mix`` advancing the token-shift state."""
+    out = rwkv_channel_mix(p, cfg, x, x_prev=state["cm_x"])
+    return out, {**state, "cm_x": x[:, -1].astype(state["cm_x"].dtype)}
 
 
 def rwkv_init_state(cfg: ModelConfig, batch: int):

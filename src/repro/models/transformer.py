@@ -228,6 +228,74 @@ def lm_init_cache(params, cfg: ModelConfig, batch_size: int, max_len: int,
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_super,) + x.shape).copy(), one)
 
 
+def _prefill_layer(lp, cache_l, cfg: ModelConfig, i: int, x, positions):
+    """One layer over the full prompt, filling its decode cache.
+
+    The residual math is identical to ``_apply_layer`` (train path, aux
+    losses dropped — inference); the cache comes out as if the prompt had
+    been decoded token by token."""
+    kind = cfg.layer_kind(i)
+    if kind == "attn":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        y, cache_l = attn.attn_prefill(lp["attn"], cfg, h, cache_l, positions,
+                                       window=cfg.layer_window(i))
+        x = x + y
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        if cfg.layer_is_moe(i):
+            y, _ = mlp_mod.moe_apply(lp["moe"], cfg, h)
+        else:
+            y = mlp_mod.mlp_apply(lp["mlp"], cfg, h)
+        x = x + y
+    elif kind == "mamba":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        y, cache_l = ssm_mod.mamba_prefill(lp["mamba"], cfg, h, cache_l)
+        x = x + y
+        if cfg.layer_is_moe(i):
+            h = apply_norm(lp["ln2"], x, cfg.norm)
+            y, _ = mlp_mod.moe_apply(lp["moe"], cfg, h)
+            x = x + y
+    elif kind == "rwkv":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        y, cache_l = ssm_mod.rwkv_time_mix_prefill(lp["rwkv_tm"], cfg, h, cache_l)
+        x = x + y
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        y, cache_l = ssm_mod.rwkv_channel_mix_prefill(lp["rwkv_tm"], cfg, h,
+                                                      cache_l)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    x = maybe_shard(x, P(("pod", "data"), "model", None))
+    return x, cache_l
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens, cache, embeds=None,
+               positions=None) -> Tuple[jax.Array, object]:
+    """True full-sequence prefill: ONE forward through the train-path math
+    that also fills the decode cache — replacing the O(P) token-by-token
+    Python loop.  Returns (logits (B, S_total, V), cache ready for decode at
+    index S_total)."""
+    x = embed_tokens(params, cfg, tokens, embeds)
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = _positions_for(cfg, B, S)
+    x = maybe_shard(x, P(("pod", "data"), None, None))
+    n_super = num_superblocks(params)
+    if n_super > 0:
+        def scan_fn(x, sb_and_cache):
+            sb, cache_sb = sb_and_cache
+            for i in range(cfg.pattern_period):
+                x, new_c = _prefill_layer(sb[f"layer{i}"], cache_sb[f"layer{i}"],
+                                          cfg, i, x, positions)
+                cache_sb[f"layer{i}"] = new_c
+            return x, cache_sb
+        x, cache = jax.lax.scan(scan_fn, x, (params["blocks"], cache))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap(x @ head, cfg.final_logit_softcap)
+    logits = maybe_shard(logits, P(("pod", "data"), None, "model"))
+    return logits, cache
+
+
 def _decode_layer(lp, cache_l, cfg: ModelConfig, i: int, x, index, positions):
     kind = cfg.layer_kind(i)
     if kind == "attn":

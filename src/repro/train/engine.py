@@ -69,7 +69,8 @@ class ProgressiveTrainer:
                  mesh=None, checkpoint_dir: Optional[str] = None,
                  data: Optional[SyntheticLM] = None, eval_batches=None,
                  dtype=jnp.float32, log_fn: Callable = print,
-                 fsdp: bool = True, layout: str = "tp"):
+                 fsdp: bool = True, layout: str = "tp",
+                 moe_fsdp: str = "auto"):
         if tcfg.global_batch % max(tcfg.grad_accum, 1):
             raise ValueError(f"global_batch {tcfg.global_batch} not divisible "
                              f"by grad_accum {tcfg.grad_accum}")
@@ -90,6 +91,7 @@ class ProgressiveTrainer:
         self.log_fn = log_fn
         self.fsdp = fsdp
         self.layout = layout
+        self.moe_fsdp = moe_fsdp
 
         dcfg = DataConfig(vocab_size=model_cfg.vocab_size,
                           seq_len=tcfg.seq_len,
@@ -124,8 +126,9 @@ class ProgressiveTrainer:
             jax.random.PRNGKey(0))
         os_struct = jax.eval_shape(self.opt.init, p_struct)
         p_sh = shd.params_shardings(p_struct, self.mesh, fsdp=self.fsdp,
-                                    layout=self.layout)
+                                    moe_fsdp=self.moe_fsdp, layout=self.layout)
         os_sh = shd.opt_state_shardings(os_struct, self.mesh, fsdp=self.fsdp,
+                                        moe_fsdp=self.moe_fsdp,
                                         layout=self.layout)
         return p_sh, os_sh, p_struct, os_struct
 
@@ -224,7 +227,8 @@ class ProgressiveTrainer:
                     cur_cfg, e.target_layers, e.init, params, opt_state,
                     insert_at=e.insert_at,
                     opt_state_policy=e.opt_state_policy, dtype=self.dtype,
-                    mesh=self.mesh, fsdp=self.fsdp, layout=self.layout)
+                    mesh=self.mesh, fsdp=self.fsdp, layout=self.layout,
+                    moe_fsdp=self.moe_fsdp)
                 key = jax.random.PRNGKey(tcfg.seed + 17 + step)
                 params, opt_state = expand_fn(params, opt_state, key)
                 cur_layers = e.target_layers

@@ -1,0 +1,190 @@
+"""Mesh-aware serving engine: true prefill + donated sharded caches.
+
+``ServeEngine`` is the inference half of ``repro.train.engine``'s sharding
+discipline.  The contract:
+
+  * At construction, per-leaf ``NamedSharding``s for the params are resolved
+    from ``repro.distributed.sharding`` (TP over 'model', no FSDP — serving
+    wants weights resident, not gathered per block) and the params are
+    placed once.  Per (batch, temperature) the engine resolves KV/SSM cache
+    shardings (``cache_shardings``: batch over 'data', longest dim over
+    'model') and compiles a prefill step and a decode step with explicit
+    ``in_shardings``/``out_shardings`` and **donated caches**.
+  * Prefill is ONE compiled full-sequence forward through the train-path
+    math that also fills the cache (``ModelApi.prefill``) — not a token-by-
+    token Python loop — and prompts arrive sharded over the data axis.
+  * Sampling (greedy / temperature) is jitted *into* both steps, so the
+    autoregressive loop is one device round-trip per token: the sampled
+    token, decode cursor, and PRNG key all live on device and feed straight
+    back into the next step.  Nothing crosses to the host until the caller
+    asks for the final token matrix.
+  * The same engine runs a 1x1 mesh (exact single-device numerics — the
+    ``serve_lib.Generator`` wrapper) or any (data, model) production mesh;
+    a depth-expanded checkpoint serves through the identical code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.launch import mesh as mesh_lib
+from repro.models import common as model_common
+from repro.models import registry
+from repro.train import steps as steps_lib
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray               # (B, prompt + generated)
+    steps: int                       # generated tokens; the first comes out
+                                     # of the ONE fused prefill call, so the
+                                     # decode loop runs steps-1 invocations
+                                     # (prefill no longer counts as P steps)
+    prefill_tokens: int = 0          # prompt tokens consumed by the prefill
+    logits: Optional[np.ndarray] = None  # (B, generated, V) when requested
+    prefill_s: float = 0.0           # wall time of the compiled prefill
+    decode_s: float = 0.0            # wall time of the decode loop
+
+
+class ServeEngine:
+    """Sharded serving engine (see module docstring)."""
+
+    def __init__(self, cfg: ModelConfig, params, mesh=None, max_len: int = 512,
+                 cache_dtype=jnp.float32, fsdp: bool = False,
+                 layout: str = "tp", moe_fsdp: str = "auto"):
+        # Same RNG-layout guard as the train engine: sampled bits must not
+        # depend on the mesh the categorical runs under.
+        if "JAX_THREEFRY_PARTITIONABLE" not in os.environ:
+            jax.config.update("jax_threefry_partitionable", True)
+        self.cfg = cfg
+        self.api = registry.get_model(cfg)
+        if self.api.prefill is None:
+            raise NotImplementedError(
+                f"{cfg.name}: arch has no prefill path; ServeEngine supports "
+                "decoder-only archs (transformer / ssm / rwkv6)")
+        self.mesh = mesh if mesh is not None else mesh_lib.single_device_mesh()
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.layout = layout
+        p_struct = jax.eval_shape(lambda t: t, params)
+        self.param_shardings = shd.params_shardings(
+            p_struct, self.mesh, fsdp=fsdp, moe_fsdp=moe_fsdp, layout=layout)
+        self.params = jax.device_put(params, self.param_shardings)
+        self._replicated = shd.replicated(self.mesh)
+        self._built = {}              # (B, temperature) -> compiled steps
+
+    # -- sharding resolution / compilation ----------------------------------
+
+    def _shardings(self, batch: int) -> steps_lib.ServeShardings:
+        cache_struct = jax.eval_shape(
+            functools.partial(self.api.init_cache, cfg=self.cfg,
+                              batch_size=batch, max_len=self.max_len,
+                              dtype=self.cache_dtype), self.params)
+        tok_struct = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        logit_struct = jax.ShapeDtypeStruct((batch, 1, self.cfg.vocab_size),
+                                            jnp.float32)
+        return steps_lib.ServeShardings(
+            mesh=self.mesh,
+            params=self.param_shardings,
+            cache=shd.cache_shardings(cache_struct, self.mesh),
+            tokens=shd.batch_shardings(tok_struct, self.mesh,
+                                       layout=self.layout),
+            logits=shd.batch_shardings(logit_struct, self.mesh,
+                                       layout=self.layout),
+            replicated=self._replicated)
+
+    def _steps(self, batch: int, temperature: float):
+        """Compiled (prefill, decode, shardings, init_cache) for one batch
+        size and sampling mode.  Only greedy-vs-sample is a compile-time
+        switch — the temperature value itself is a traced operand, so all
+        temperatures > 0 share one executable and the cache stays bounded
+        at two entries per batch size."""
+        key = (batch, temperature > 0)
+        if key not in self._built:
+            sh = self._shardings(batch)
+            prefill = steps_lib.make_prefill_step(
+                self.cfg, sample=temperature > 0, shardings=sh)
+            decode = steps_lib.make_serve_decode_step(
+                self.cfg, sample=temperature > 0, shardings=sh)
+            init_cache = jax.jit(
+                functools.partial(self.api.init_cache, cfg=self.cfg,
+                                  batch_size=batch, max_len=self.max_len,
+                                  dtype=self.cache_dtype),
+                out_shardings=sh.cache)
+            self._built[key] = (prefill, decode, sh, init_cache)
+        return self._built[key]
+
+    # -- generation ---------------------------------------------------------
+
+    def generate_arrays(self, prompts, num_tokens: int,
+                        temperature: float = 0.0, seed: int = 0,
+                        collect_logits: bool = False):
+        """Device-resident generation.
+
+        Returns ``(tokens (B, P+G) jax.Array, per-step logits list or None,
+        (prefill_s, decode_s))``.  After the initial placement of prompts and
+        key, the decode loop moves nothing device->host: sampled tokens,
+        cursor, and key are fed straight back, and the cache is donated in
+        place.  Callers wanting numpy use :meth:`generate`.
+        """
+        prompts = np.asarray(prompts, np.int32)
+        B, P = prompts.shape
+        if P + num_tokens > self.max_len:
+            raise ValueError(f"prompt {P} + gen {num_tokens} exceeds "
+                             f"max_len {self.max_len}")
+        prefill, decode, sh, init_cache = self._steps(B, temperature)
+        prev_mesh = model_common.get_active_mesh()
+        prev_layout = model_common.get_activation_layout()
+        model_common.set_active_mesh(self.mesh)
+        model_common.set_activation_layout(self.layout)
+        try:
+            cache = init_cache(self.params)
+            toks = jax.device_put(prompts, sh.tokens)
+            key = jax.device_put(jax.random.PRNGKey(seed), self._replicated)
+            temp = jax.device_put(np.float32(max(temperature, 1e-6)),
+                                  self._replicated)
+            t0 = time.perf_counter()
+            nxt, logits, cache, index, key = prefill(self.params, toks,
+                                                     cache, temp, key)
+            jax.block_until_ready(nxt)
+            t1 = time.perf_counter()
+            out: List = [nxt]
+            logs: Optional[List] = [logits] if collect_logits else None
+            for _ in range(num_tokens - 1):
+                nxt, logits, cache, index, key = decode(self.params, nxt,
+                                                        cache, index, temp,
+                                                        key)
+                out.append(nxt)
+                if logs is not None:
+                    logs.append(logits)
+            tokens = jnp.concatenate([toks] + out, axis=1)
+            jax.block_until_ready(tokens)
+            t2 = time.perf_counter()
+        finally:
+            model_common.set_active_mesh(prev_mesh)
+            model_common.set_activation_layout(prev_layout)
+        return tokens, logs, (t1 - t0, t2 - t1)
+
+    def generate(self, prompts, num_tokens: int, temperature: float = 0.0,
+                 seed: int = 0, return_logits: bool = False) -> GenerateResult:
+        """prompts: (B, P) int32.  Greedy if temperature == 0."""
+        if num_tokens <= 0:
+            return GenerateResult(np.asarray(prompts, np.int32), steps=0,
+                                  prefill_tokens=prompts.shape[1])
+        tokens, logs, (pf_s, dec_s) = self.generate_arrays(
+            prompts, num_tokens, temperature=temperature, seed=seed,
+            collect_logits=return_logits)
+        logits = (np.asarray(jnp.concatenate(logs, axis=1))
+                  if logs is not None else None)
+        return GenerateResult(np.asarray(tokens), steps=num_tokens,
+                              prefill_tokens=prompts.shape[1], logits=logits,
+                              prefill_s=pf_s, decode_s=dec_s)

@@ -1,64 +1,34 @@
-"""Batched serving: prefill + decode with donated KV caches.
+"""Batched serving: thin single-device wrapper over the serve engine.
 
-``Generator`` drives a model through prefill (full-sequence forward that
-also fills the cache via repeated decode for small models, or the prefill
-path at scale) and autoregressive decode with greedy/temperature sampling.
+``Generator`` keeps the historical single-device API (same pattern as
+``loop.train`` over ``train/engine.ProgressiveTrainer``): it drives
+``repro.train.serve_engine.ServeEngine`` under a degenerate 1x1 mesh, so the
+exact sharded code path — one compiled full-sequence prefill, donated-cache
+decode with fused sampling — runs with single-device numerics.  Pass
+``mesh=`` to serve sharded.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import registry
-from repro.train import steps as steps_lib
+from repro.train.serve_engine import GenerateResult, ServeEngine
 
-
-@dataclasses.dataclass
-class GenerateResult:
-    tokens: np.ndarray               # (B, prompt + generated)
-    steps: int
+__all__ = ["Generator", "GenerateResult", "ServeEngine"]
 
 
 class Generator:
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, mesh=None):
         self.cfg = cfg
-        self.params = params
         self.max_len = max_len
-        self.cache_dtype = cache_dtype
-        self.api = registry.get_model(cfg)
-        self._decode = steps_lib.make_decode_step(cfg, donate_cache=True)
+        self.engine = ServeEngine(cfg, params, mesh=mesh, max_len=max_len,
+                                  cache_dtype=cache_dtype)
+        self.params = self.engine.params
 
     def generate(self, prompts: np.ndarray, num_tokens: int,
                  temperature: float = 0.0, seed: int = 0) -> GenerateResult:
         """prompts: (B, P) int32.  Greedy if temperature == 0."""
-        B, P = prompts.shape
-        cache = self.api.init_cache(self.params, self.cfg, B, self.max_len,
-                                    dtype=self.cache_dtype)
-        toks = jnp.asarray(prompts)
-        key = jax.random.PRNGKey(seed)
-        out = [toks]
-        # prefill token-by-token through the decode path (exactness over
-        # speed at CPU test scale; launch/serve.py uses the prefill path).
-        logits = None
-        for t in range(P):
-            logits, cache = self._decode(self.params, toks[:, t:t + 1], cache,
-                                         jnp.int32(t))
-        cur = None
-        for i in range(num_tokens):
-            if temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(sub, logits[:, -1] / temperature)
-            else:
-                nxt = jnp.argmax(logits[:, -1], axis=-1)
-            cur = nxt[:, None].astype(jnp.int32)
-            out.append(cur)
-            logits, cache = self._decode(self.params, cur, cache,
-                                         jnp.int32(P + i))
-        return GenerateResult(np.asarray(jnp.concatenate(out, axis=1)),
-                              steps=P + num_tokens)
+        return self.engine.generate(prompts, num_tokens,
+                                    temperature=temperature, seed=seed)

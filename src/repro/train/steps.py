@@ -136,7 +136,8 @@ def make_eval_step(cfg: ModelConfig,
                    out_shardings=shardings.replicated)
 
 
-def make_decode_step(cfg: ModelConfig, donate_cache: bool = True) -> Callable:
+def make_decode_step(cfg: ModelConfig, donate_cache: bool = True,
+                     shardings: Optional["ServeShardings"] = None) -> Callable:
     """(params, tokens(B,1), cache, index) -> (logits, cache).  The cache is
     donated: decode updates in place on device."""
     api = registry.get_model(cfg)
@@ -144,7 +145,113 @@ def make_decode_step(cfg: ModelConfig, donate_cache: bool = True) -> Callable:
     def fn(params, tokens, cache, index):
         return api.decode_step(params, cfg, tokens, cache, index)
 
-    return jax.jit(fn, donate_argnums=(2,) if donate_cache else ())
+    donate = (2,) if donate_cache else ()
+    if shardings is None:
+        return jax.jit(fn, donate_argnums=donate)
+    return jax.jit(
+        fn,
+        in_shardings=(shardings.params, shardings.tokens, shardings.cache,
+                      shardings.replicated),
+        out_shardings=(shardings.logits, shardings.cache),
+        donate_argnums=donate)
+
+
+# ---------------------------------------------------------------------------
+# Serving steps (true prefill + fused sampling)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeShardings:
+    """Resolved NamedSharding pytrees for one (model depth, batch) serve.
+
+    ``tokens``/``logits`` shard the batch dim over the DP axes (shape-
+    agnostic: the same NamedSharding serves (B,P) prompts, (B,1) decode
+    tokens and (B,S,V) logits); ``cache`` follows
+    ``distributed.sharding.cache_shardings``.
+    """
+    mesh: object
+    params: object            # pytree matching params
+    cache: object             # pytree matching the decode cache
+    tokens: object            # batch-dim sharding for token arrays
+    logits: object            # batch-dim sharding for logits
+    replicated: object        # scalars: index, PRNG key
+
+
+def _sample(logits, temp, key, sample: bool):
+    """logits (B, V) -> (next token (B,), key).  Only the greedy-vs-sample
+    *branch* is static; `temp` is a traced replicated scalar, so every
+    temperature > 0 shares one compiled step (no recompile per value)."""
+    if not sample:
+        return jnp.argmax(logits, axis=-1), key
+    key, sub = jax.random.split(key)
+    nxt = jax.random.categorical(sub, logits.astype(jnp.float32) / temp)
+    return nxt, key
+
+
+def make_prefill_step(cfg: ModelConfig, sample: bool = False,
+                      donate_cache: bool = True,
+                      shardings: Optional[ServeShardings] = None) -> Callable:
+    """(params, prompts(B,P), cache, temp, key) ->
+           (next_token(B,1), last_logits(B,1,V), cache, index, key).
+
+    ONE compiled forward fills the whole cache (no per-token Python loop)
+    and samples the first generated token on device; `index` comes back as
+    the on-device decode cursor (= P), so the autoregressive loop that
+    follows never touches the host.  Only the last position's logits leave
+    the step: returning all (B,P,V) would force XLA to keep the lm_head
+    matmul for every prompt position (P x the needed prefill head cost)."""
+    api = registry.get_model(cfg)
+    if api.prefill is None:
+        raise NotImplementedError(f"{cfg.name}: no prefill path for this arch")
+
+    def fn(params, prompts, cache, temp, key):
+        logits, cache = api.prefill(params, cfg, prompts, cache)
+        last = logits[:, -1:]
+        nxt, key = _sample(last[:, 0], temp, key, sample)
+        index = jnp.asarray(prompts.shape[1], jnp.int32)
+        return nxt[:, None].astype(jnp.int32), last, cache, index, key
+
+    donate = (2,) if donate_cache else ()
+    if shardings is None:
+        return jax.jit(fn, donate_argnums=donate)
+    return jax.jit(
+        fn,
+        in_shardings=(shardings.params, shardings.tokens, shardings.cache,
+                      shardings.replicated, shardings.replicated),
+        out_shardings=(shardings.tokens, shardings.logits, shardings.cache,
+                       shardings.replicated, shardings.replicated),
+        donate_argnums=donate)
+
+
+def make_serve_decode_step(cfg: ModelConfig, sample: bool = False,
+                           donate_cache: bool = True,
+                           shardings: Optional[ServeShardings] = None) -> Callable:
+    """(params, token(B,1), cache, index, temp, key) ->
+           (next_token(B,1), logits(B,1,V), cache, index+1, key).
+
+    Decode + sampling fused into one jit: the loop does one device
+    round-trip per generated token instead of three (logits fetch, host
+    sample, token upload), and the cache is donated so decode updates the
+    same device buffers every step."""
+    api = registry.get_model(cfg)
+
+    def fn(params, tokens, cache, index, temp, key):
+        logits, cache = api.decode_step(params, cfg, tokens, cache, index)
+        nxt, key = _sample(logits[:, -1], temp, key, sample)
+        return nxt[:, None].astype(jnp.int32), logits, cache, index + 1, key
+
+    donate = (2,) if donate_cache else ()
+    if shardings is None:
+        return jax.jit(fn, donate_argnums=donate)
+    return jax.jit(
+        fn,
+        in_shardings=(shardings.params, shardings.tokens, shardings.cache,
+                      shardings.replicated, shardings.replicated,
+                      shardings.replicated),
+        out_shardings=(shardings.tokens, shardings.logits, shardings.cache,
+                       shardings.replicated, shardings.replicated),
+        donate_argnums=donate)
 
 
 def count_params(params) -> int:

@@ -3,6 +3,7 @@
 #
 #   bash test.sh                      # full suite
 #   bash test.sh tests/test_core.py   # one module
+#   bash test.sh -m "not slow"        # skip the multi-device parity tests
 #
 # 8 fake CPU devices so the sharded train engine and the multi-device tests
 # (tests/test_distributed.py) exercise real GSPMD partitioning hermetically.

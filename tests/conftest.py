@@ -15,3 +15,12 @@ if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "
                                + os.environ.get("XLA_FLAGS", "")).strip()
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    # Registered here (no pytest.ini/pyproject): multi-device serving /
+    # distributed parity tests are marked slow; deselect with
+    # `bash test.sh -m "not slow"` for a quick inner loop.
+    config.addinivalue_line(
+        "markers", "slow: multi-device parity tests (several train/serve "
+        "runs each); deselect with -m 'not slow'")

@@ -16,8 +16,8 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import checkpointer as ckpt
-from repro.configs.base import (ExpansionConfig, ModelConfig, OptimizerConfig,
-                                ScheduleConfig, TrainConfig)
+from repro.configs.base import (ExpansionConfig, ModelConfig, MoEConfig,
+                                OptimizerConfig, ScheduleConfig, TrainConfig)
 from repro.core import expansion as exp
 from repro.data.synthetic import DataConfig, SyntheticLM
 from repro.distributed import sharding as shd
@@ -29,6 +29,8 @@ from repro.train.engine import ProgressiveTrainer
 CFG = ModelConfig(name="dist", family="dense", num_layers=4, d_model=32,
                   num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
                   max_seq_len=32)
+CFG_MOE = dataclasses.replace(CFG, name="dist-moe", family="moe",
+                              moe=MoEConfig(num_experts=8, top_k=2))
 
 
 def tcfg(**kw):
@@ -70,6 +72,26 @@ def test_sharded_matches_single_device_through_expansion():
     blocks = jax.tree.leaves(sharded.params["blocks"])
     assert all(b.sharding.mesh == sharded.params["embed"].sharding.mesh
                for b in blocks)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kw", [dict(moe_fsdp="ef"), dict(layout="fsdp")],
+                         ids=["moe_fsdp_ef", "layout_fsdp"])
+def test_moe_sharded_matches_single_device(kw):
+    """MoE under the multi-device harness (ROADMAP open item): the expert-dim
+    FSDP layout ('ef') and the pure-ZeRO-3 layout both reproduce the
+    single-device loss trajectory step for step, across the τ expansion —
+    the GShard dispatch groups are mesh-independent, so only float
+    reassociation separates the runs."""
+    single = ProgressiveTrainer(CFG_MOE, tcfg(), mesh=mesh_lib.single_device_mesh(),
+                                log_fn=lambda *a: None).run()
+    sharded = ProgressiveTrainer(CFG_MOE, tcfg(), mesh=mesh42(),
+                                 log_fn=lambda *a: None, **kw).run()
+    assert single.history["expansion_steps"] == \
+        sharded.history["expansion_steps"] == [6]
+    assert sharded.final_layers == 2
+    np.testing.assert_allclose(sharded.history["loss"],
+                               single.history["loss"], rtol=0, atol=1e-4)
 
 
 def test_grad_accum_decouples_global_batch():
