@@ -231,12 +231,8 @@ def bench_kernels(fast=False):
 # Serving: prefill/decode throughput, single device vs 8-device mesh
 # ---------------------------------------------------------------------------
 
-def bench_serve(fast=False):
-    # 8 fake CPU devices (same harness as test.sh) so the mesh layout is a
-    # real 8-way data-parallel decode.  Only possible if jax hasn't been
-    # initialized yet (i.e. `--only serve`); when other benches ran first,
-    # the environment — and their recorded baselines — stay untouched and
-    # the mesh layout degrades to however many devices exist.
+def _fake_devices_for_serve():
+    """8 fake CPU devices iff jax is not initialized yet (see bench_serve)."""
     if "jax" not in sys.modules:
         if "--xla_force_host_platform_device_count" not in \
                 os.environ.get("XLA_FLAGS", ""):
@@ -245,6 +241,15 @@ def bench_serve(fast=False):
                 + os.environ.get("XLA_FLAGS", "")).strip()
         os.environ.setdefault("JAX_PLATFORMS", "cpu")
         os.environ.setdefault("JAX_THREEFRY_PARTITIONABLE", "true")
+
+
+def bench_serve(fast=False):
+    # 8 fake CPU devices (same harness as test.sh) so the mesh layout is a
+    # real 8-way data-parallel decode.  Only possible if jax hasn't been
+    # initialized yet (i.e. `--only serve`); when other benches ran first,
+    # the environment — and their recorded baselines — stay untouched and
+    # the mesh layout degrades to however many devices exist.
+    _fake_devices_for_serve()
     import jax
     import numpy as np
     from benchmarks.common import TINY
@@ -292,6 +297,121 @@ def bench_serve(fast=False):
               "mesh layout", flush=True)
 
 
+# ---------------------------------------------------------------------------
+# Continuous batching: aggregate throughput + TTFT vs batch-to-completion
+# ---------------------------------------------------------------------------
+
+def bench_serve_continuous(fast=False):
+    """Staggered Poisson arrivals with real traffic shape — bucketed prompt
+    lengths and a long-tail generation mix (most requests short, one long
+    per batch-worth) — at max-batch 4: continuous batching admits each
+    request into the first freed cache slot, so short requests backfill
+    around the long ones; the batch-to-completion baseline pads every group
+    of 4 to its longest prompt and stalls every row on the group's longest
+    generation.  Reported throughput counts USEFUL tokens (each request's
+    own budget) over the serving wall clock.  Prompt lengths come from 4
+    buckets so the per-length B=1 prefill executables are warmed up front
+    (as a length-bucketing deployment would)."""
+    _fake_devices_for_serve()
+    import jax
+    import numpy as np
+    from benchmarks.common import TINY
+    from repro.launch import mesh as mesh_lib
+    from repro.models import registry
+    from repro.train.serve_engine import ServeEngine
+    from repro.train.serve_scheduler import (ContinuousScheduler, Request,
+                                             summarize)
+
+    MAXB = 4
+    p_lens = np.array([16, 8, 4, 12, 8, 16, 4, 8, 12, 4, 16, 8])
+    g_lens = np.array([44, 6, 9, 5, 41, 7, 10, 6, 46, 8, 5, 11])
+    if fast:
+        p_lens, g_lens = p_lens[:8], g_lens[:8] // 2 + 3
+    N = len(p_lens)
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(0.01, N))      # ~100 req/s offered
+    max_len = int(p_lens.max() + g_lens.max() + 1)
+    api = registry.get_model(TINY)
+    params = api.init(jax.random.PRNGKey(0), TINY)
+
+    rng2 = np.random.default_rng(1)
+    reqs = [Request(prompt=rng2.integers(0, TINY.vocab_size,
+                                         (int(p),)).astype(np.int32),
+                    max_new_tokens=int(g), arrival_s=float(a))
+            for p, g, a in zip(p_lens, g_lens, arrivals)]
+
+    def run_continuous(eng):
+        sched = ContinuousScheduler(eng, max_batch=MAXB)
+        sched.warmup(reqs)      # every prompt-length bucket + admit + decode
+        t0 = time.perf_counter()
+        results = sched.run(reqs)
+        return summarize(results, time.perf_counter() - t0)
+
+    def run_batch_baseline(eng):
+        """Groups of MAXB in arrival order; each group starts once its last
+        request has arrived, prompts padded to the group max, decode runs
+        to the group's max generation length."""
+        groups = [reqs[i:i + MAXB] for i in range(0, N, MAXB)]
+        for g in groups:                                        # compile
+            pmax = max(len(r.prompt) for r in g)
+            prompts = np.stack([np.pad(r.prompt, (0, pmax - len(r.prompt)))
+                                for r in g])
+            eng.generate(prompts, 2)
+        t0 = time.perf_counter()
+        ttfts = []
+        for g in groups:
+            start = max(r.arrival_s for r in g)                 # barrier
+            while time.perf_counter() - t0 < start:
+                time.sleep(1e-4)
+            pmax = max(len(r.prompt) for r in g)
+            gmax = max(r.max_new_tokens for r in g)
+            prompts = np.stack([np.pad(r.prompt, (0, pmax - len(r.prompt)))
+                                for r in g])
+            t_pf = time.perf_counter()
+            res = eng.generate(prompts, gmax)
+            first = t_pf - t0 + res.prefill_s
+            ttfts += [first - r.arrival_s for r in g]
+        wall = time.perf_counter() - t0
+        useful = int(sum(r.max_new_tokens for r in reqs))
+        ttfts = np.sort(ttfts)
+        return {"requests": N, "generated_tokens": useful, "wall_s": wall,
+                "tokens_per_s": useful / max(wall, 1e-9),
+                "ttft_p50_s": float(np.percentile(ttfts, 50)),
+                "ttft_p95_s": float(np.percentile(ttfts, 95))}
+
+    n_dev = len(jax.devices())
+    meshes = {"single": mesh_lib.single_device_mesh()}
+    if n_dev > 1:
+        meshes[f"mesh{n_dev}"] = mesh_lib.make_train_mesh("host")
+    out = {"requests": N, "max_batch": MAXB, "arch": TINY.name,
+           "prompt_lens": p_lens.tolist(), "gen_lens": g_lens.tolist(),
+           "arrival_s": [round(float(a), 4) for a in arrivals],
+           "layouts": {}}
+    for name, mesh in meshes.items():
+        eng = ServeEngine(TINY, params, mesh=mesh, max_len=max_len)
+        cont = run_continuous(eng)
+        base = run_batch_baseline(eng)
+        speedup = cont["tokens_per_s"] / max(base["tokens_per_s"], 1e-9)
+        out["layouts"][name] = {"continuous": cont,
+                                "batch_to_completion": base,
+                                "throughput_speedup": speedup}
+        _row(f"serve_continuous/{name}", cont["wall_s"] * 1e6,
+             f"tokens_per_s={cont['tokens_per_s']:.1f};"
+             f"baseline={base['tokens_per_s']:.1f};"
+             f"speedup={speedup:.2f};"
+             f"ttft_p50_ms={cont['ttft_p50_s'] * 1e3:.1f};"
+             f"ttft_p95_ms={cont['ttft_p95_s'] * 1e3:.1f}")
+    if n_dev > 1:
+        with open("BENCH_serve_continuous.json", "w") as f:
+            json.dump(out, f, indent=1)
+        print("# wrote BENCH_serve_continuous.json", flush=True)
+    else:
+        print("# single device only (jax initialized before "
+              "bench_serve_continuous); BENCH_serve_continuous.json left "
+              "untouched — run `--only serve_continuous` for the mesh "
+              "layout", flush=True)
+
+
 BENCHES = {
     "expansion_init": bench_expansion_init,
     "copying_variants": bench_copying_variants,
@@ -302,8 +422,10 @@ BENCHES = {
     "mup_transfer": bench_mup_transfer,
     "theory": bench_theory,
     "kernels": bench_kernels,
-    # last: mutates the jax environment when it runs first (`--only serve`)
+    # last two: mutate the jax environment when they run first
+    # (`--only serve` / `--only serve_continuous`)
     "serve": bench_serve,
+    "serve_continuous": bench_serve_continuous,
 }
 
 

@@ -1,0 +1,73 @@
+"""Continuous-batching serving example: staggered request admission.
+
+Eight requests with ragged prompt/generation lengths arrive over ~100ms
+(Poisson).  The scheduler prefills each one alone at its exact prompt
+length, scatters it into the first freed cache slot, and every iteration
+advances ALL live rows one token at their own cursors — no row ever waits
+for another request to finish.  Compare the streamed completion order and
+per-request TTFT against what a batch-to-completion engine would do (stall
+everything on the longest request of the batch).
+
+    PYTHONPATH=src python examples/serve_continuous.py [--arch gpt2-12l]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro import configs as cfglib
+from repro.models import registry
+from repro.train.serve_engine import ServeEngine
+from repro.train.serve_scheduler import (ContinuousScheduler, Request,
+                                         summarize)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="gpt2-12l")
+ap.add_argument("--max-batch", type=int, default=4)
+ap.add_argument("--requests", type=int, default=8)
+ap.add_argument("--temperature", type=float, default=0.0)
+args = ap.parse_args()
+
+if args.arch in cfglib.ASSIGNED_ARCHS:
+    cfg = cfglib.get_smoke_config(args.arch)
+else:                       # CPU-scale reduction (as in the smoke tests)
+    import dataclasses
+    cfg = dataclasses.replace(
+        cfglib.get_config(args.arch).with_depth(2), d_model=64, num_heads=4,
+        num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256,
+        max_seq_len=64)
+api = registry.get_model(cfg)
+params = api.init(jax.random.PRNGKey(0), cfg)
+
+rng = np.random.default_rng(0)
+p_lens = rng.integers(4, 17, args.requests)
+g_lens = rng.integers(4, 25, args.requests)
+arrivals = np.cumsum(rng.exponential(0.015, args.requests))
+reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                    (int(p),)).astype(np.int32),
+                max_new_tokens=int(g), arrival_s=float(a))
+        for p, g, a in zip(p_lens, g_lens, arrivals)]
+
+engine = ServeEngine(cfg, params,
+                     max_len=int(p_lens.max() + g_lens.max() + 1))
+sched = ContinuousScheduler(engine, max_batch=args.max_batch,
+                            temperature=args.temperature)
+print(f"serving {cfg.name} ({cfg.num_layers} layers), "
+      f"{args.requests} requests into {args.max_batch} slots")
+sched.warmup(reqs)   # compile the per-length prefills outside the timed run
+t0 = time.perf_counter()
+results = sched.run(reqs, on_finish=lambda r: print(
+    f"  [{time.perf_counter() - t0:6.3f}s] req {r.uid} done: "
+    f"P={len(r.prompt)} +{len(r.new_tokens)} tok slot={r.slot} "
+    f"ttft={r.ttft_s * 1e3:.1f}ms"))
+stats = summarize(results, time.perf_counter() - t0)
+print(f"aggregate: {stats['generated_tokens']} tokens in "
+      f"{stats['wall_s']:.3f}s = {stats['tokens_per_s']:.1f} tok/s; "
+      f"ttft p50 {stats['ttft_p50_s'] * 1e3:.1f}ms / "
+      f"p95 {stats['ttft_p95_s'] * 1e3:.1f}ms")
+print("sample:", results[0].tokens.tolist())

@@ -167,7 +167,19 @@ def load_metadata(directory: str, step: int) -> dict:
 
 
 class AsyncCheckpointer:
-    """Overlaps checkpoint I/O with training (single in-flight write)."""
+    """Overlaps the checkpoint's device->host gather AND file I/O with
+    training (single in-flight write).
+
+    ``save`` returns as soon as an async on-device snapshot of the tree is
+    dispatched (cheap D2D copy; required for correctness — the engine
+    *donates* params/opt-state into the next train step, so the original
+    buffers are invalid by the time a background gather would read them).
+    The snapshot's D2H transfer is started immediately
+    (``copy_to_host_async``) and overlaps the next train step; a worker
+    thread then materializes the host arrays and runs the same atomic
+    write path as :func:`save` (manifest-only fsync + rename).  Errors
+    surface on the next ``wait``/``save``.
+    """
 
     def __init__(self):
         self._thread: Optional[threading.Thread] = None
@@ -176,10 +188,18 @@ class AsyncCheckpointer:
     def save(self, directory: str, step: int, tree: Any,
              metadata: Optional[dict] = None, keep: int = 3):
         self.wait()
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        import jax.numpy as jnp
+        # Async device-side snapshot: decouples the checkpoint from buffer
+        # donation in the steps that follow, without blocking the caller.
+        snap = jax.tree.map(
+            lambda x: jnp.copy(x) if isinstance(x, jax.Array) else x, tree)
+        for leaf in jax.tree.leaves(snap):      # start D2H in the background
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
 
         def run():
             try:
+                host_tree = jax.tree.map(lambda x: np.asarray(x), snap)
                 save(directory, step, host_tree, metadata, keep)
             except BaseException as e:   # surfaced on next wait()
                 self._error = e

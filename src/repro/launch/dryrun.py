@@ -130,7 +130,7 @@ def build_decode_lowering(cfg: ModelConfig, shape: ShapeConfig, mesh,
     p_sh = shd.params_shardings(params_struct, mesh, fsdp=False)
     c_sh = shd.cache_shardings(cache_struct, mesh)
     tok_struct = jax.ShapeDtypeStruct((B, 1), jnp.int32)
-    idx_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    idx_struct = jax.ShapeDtypeStruct((B,), jnp.int32)   # per-row cursor
     t_sh = shd.batch_shardings(tok_struct, mesh)
 
     def serve_step(params, tokens, cache, index):

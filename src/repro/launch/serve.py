@@ -18,10 +18,17 @@ depth-expanded model serves at its grown depth) and the engine places it
 sharded onto the serve mesh — no optimizer state is touched.
 Prefill and decode throughput are reported separately: prefill is one
 compiled full-sequence forward, decode is one fused device step per token.
+
+``--continuous`` switches to the continuous-batching scheduler
+(``train/serve_scheduler``): ``--requests`` synthetic requests with varied
+prompt/generation lengths and Poisson arrivals (``--rate`` req/s) are
+admitted into ``--max-batch`` cache slots as rows free up; aggregate
+throughput and p50/p95 time-to-first-token are reported.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -31,6 +38,8 @@ from repro.checkpoint import checkpointer as ckpt
 from repro.launch import mesh as mesh_lib
 from repro.models import registry
 from repro.train.serve_engine import ServeEngine
+from repro.train.serve_scheduler import (ContinuousScheduler, Request,
+                                         summarize)
 
 
 def load_params(checkpoint_dir: str, cfg, step=None, dtype=None):
@@ -67,6 +76,17 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: admit staggered requests "
+                         "into freed cache slots")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots for --continuous")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="synthetic requests for --continuous")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate (req/s) for --continuous")
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="stop token id for --continuous (-1: disabled)")
     args = ap.parse_args(argv)
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
@@ -78,10 +98,38 @@ def main(argv=None):
         api = registry.get_model(cfg)
         params = api.init(jax.random.PRNGKey(args.seed), cfg)
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
     engine = ServeEngine(cfg, params, mesh=mesh,
                          max_len=args.prompt_len + max(args.gen, 1) + 1)
+
+    if args.continuous:
+        lens = rng.integers(max(2, args.prompt_len // 4), args.prompt_len + 1,
+                            args.requests)
+        gens = rng.integers(max(2, args.gen // 4), max(args.gen, 2) + 1,
+                            args.requests)
+        arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                            (int(p),)).astype(np.int32),
+                        max_new_tokens=int(g), arrival_s=float(a))
+                for p, g, a in zip(lens, gens, arrivals)]
+        sched = ContinuousScheduler(engine, max_batch=args.max_batch,
+                                    temperature=args.temperature,
+                                    eos_id=args.eos, seed=args.seed)
+        sched.warmup(reqs)             # compile outside the timed run
+        t0 = time.perf_counter()
+        results = sched.run(reqs, on_finish=lambda r: print(
+            f"  req {r.uid}: +{len(r.new_tokens)} tok ({r.finish_reason}) "
+            f"ttft={r.ttft_s * 1e3:.1f}ms"))
+        stats = summarize(results, time.perf_counter() - t0)
+        print(f"arch={cfg.name} layers={cfg.num_layers} mesh={args.mesh} "
+              f"continuous max_batch={args.max_batch} "
+              f"requests={args.requests}")
+        print(f"aggregate tokens/s={stats['tokens_per_s']:.1f}  "
+              f"ttft p50={stats['ttft_p50_s'] * 1e3:.1f}ms "
+              f"p95={stats['ttft_p95_s'] * 1e3:.1f}ms")
+        return
+
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
     warmup = min(2, max(args.gen, 1))                           # compile
     engine.generate(prompts, warmup, temperature=args.temperature)
     res = engine.generate(prompts, max(args.gen, 1),

@@ -165,10 +165,16 @@ def attn_prefill(p, cfg: ModelConfig, x: jax.Array, cache,
 
 def attn_decode(p, cfg: ModelConfig, x: jax.Array, cache, cache_index: jax.Array,
                 positions: jax.Array, window: int) -> Tuple[jax.Array, dict]:
-    """x: (B, 1, D); cache per `init_kv_cache`; cache_index: () int32 — number
-    of tokens already in the cache.  Returns (out (B,1,D), new_cache)."""
+    """x: (B, 1, D); cache per `init_kv_cache`; cache_index: (B,) int32 — the
+    number of tokens already in each row's cache (a scalar broadcasts, for
+    uniform batches).  Each row writes its new K/V at its *own* slot and masks
+    validity against its own cursor, so a continuous-batching engine can run
+    rows at unrelated positions in one step.  Returns (out (B,1,D),
+    new_cache)."""
     B = x.shape[0]
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cache_index = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (B,))
+    bidx = jnp.arange(B)
     q, k_new, v_new, latent = _project_qkv(p, cfg, x)
     q, k_new = _qk_norm(p, cfg, q, k_new)
     q, k_new = _position_encode(cfg, q, k_new, positions)
@@ -176,9 +182,8 @@ def attn_decode(p, cfg: ModelConfig, x: jax.Array, cache, cache_index: jax.Array
     if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
         S = cache["latent"].shape[1]
         slot = cache_index % S if window > 0 else cache_index
-        lat = jax.lax.dynamic_update_slice(cache["latent"],
-                                           latent.astype(cache["latent"].dtype),
-                                           (0, slot, 0))
+        lat = cache["latent"].at[bidx, slot].set(
+            latent[:, 0].astype(cache["latent"].dtype))
         new_cache = {"latent": lat}
         kv = lat.astype(x.dtype) @ p["wkv_b"]
         k, v = jnp.split(kv, 2, axis=-1)
@@ -191,27 +196,25 @@ def attn_decode(p, cfg: ModelConfig, x: jax.Array, cache, cache_index: jax.Array
     else:
         S = cache["k"].shape[1]
         slot = cache_index % S if window > 0 else cache_index
-        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                         (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                         (0, slot, 0, 0))
+        k = cache["k"].at[bidx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[bidx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
         new_cache = {"k": k, "v": v}
         k = k.astype(x.dtype)
         v = v.astype(x.dtype)
 
-    # Validity mask over cache slots.
-    slots = jnp.arange(S)
+    # Per-row validity mask over cache slots: (B, S).
+    slots = jnp.arange(S)[None, :]
     if window > 0:
-        valid = slots <= jnp.minimum(cache_index, S - 1)  # ring buffer fill
+        valid = slots <= jnp.minimum(cache_index, S - 1)[:, None]  # ring fill
     else:
-        valid = slots <= cache_index
+        valid = slots <= cache_index[:, None]
 
     # Grouped-query attention: fold groups into the head dim of q.
     G = H // KVH
     qg = q.reshape(B, 1, KVH, G, hd)
     scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / jnp.sqrt(hd).astype(x.dtype)
     scores = softcap(scores, cfg.attn_logit_softcap)
-    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v).reshape(B, 1, cfg.q_dim)
     out = out @ p["wo"]

@@ -146,9 +146,11 @@ def encdec_init_cache(params, cfg: ModelConfig, batch: int, max_len: int,
 
 
 def encdec_decode_step(params, cfg: ModelConfig, tokens, cache, index):
+    """`index` (B,) int32 per-row decode cursor (scalar broadcasts)."""
     B = tokens.shape[0]
-    x = params["embed"][tokens] + params["pos_embed"][index][None, None, :]
-    positions = jnp.full((B, 1), index)
+    index = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (B,))
+    x = params["embed"][tokens] + params["pos_embed"][index][:, None, :]
+    positions = index[:, None]
     H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
 
     def scan_fn(x, lp_cache):

@@ -21,11 +21,15 @@ class ModelApi:
     loss: Callable        # (params, cfg, batch, remat=False) -> (loss, metrics)
     apply: Callable       # (params, cfg, batch) -> logits
     init_cache: Callable  # (params, cfg, batch_size, max_len, dtype) -> cache
-    decode_step: Callable  # (params, cfg, tokens, cache, index) -> (logits, cache)
+    # (params, cfg, tokens(B,1), cache, index(B,)) -> (logits, cache).
+    # `index` is the PER-ROW decode cursor — each row reads/writes its cache
+    # at its own position (a scalar broadcasts for uniform batches), and rows
+    # are independent: the continuous-batching engine relies on both.
+    decode_step: Callable
     # Full-sequence prefill that also fills the decode cache (one compiled
     # forward, not a token loop): (params, cfg, tokens, cache) ->
-    # (logits (B,S,V), cache).  None for archs without a prefill path yet
-    # (encoder-decoder).
+    # (logits (B,S,V), cache ready for decode at per-row cursor = prompt
+    # length).  None for archs without a prefill path yet (encoder-decoder).
     prefill: Optional[Callable] = None
 
 
@@ -98,7 +102,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
 
 
 def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
-    """Inputs for one serve_step: a single new token + the index."""
+    """Inputs for one serve_step: a single new token + the per-row cursor."""
     B = shape.global_batch
     return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
-            "index": jax.ShapeDtypeStruct((), jnp.int32)}
+            "index": jax.ShapeDtypeStruct((B,), jnp.int32)}

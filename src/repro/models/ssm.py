@@ -109,7 +109,13 @@ def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
 
 
 def mamba_decode(p, cfg: ModelConfig, x: jax.Array, state) -> Tuple[jax.Array, dict]:
-    """Single-token step. x: (B, 1, D) -> (B, 1, D), carrying O(1) state."""
+    """Single-token step. x: (B, 1, D) -> (B, 1, D), carrying O(1) state.
+
+    Contract (continuous batching): the conv/ssm state advance is strictly
+    per-row — row b's new state depends only on row b's input and old state —
+    so the serve decode step can freeze terminated rows with a per-row
+    select and a scheduler can scatter a freshly prefilled row's state into
+    any batch slot without touching live rows."""
     B = x.shape[0]
     d_inner, dt_rank, d_state, d_conv = mamba_dims(cfg)
     xs, z = _mamba_project(p, cfg, x)                      # (B,1,d_inner)
@@ -251,7 +257,8 @@ def rwkv_init_state(cfg: ModelConfig, batch: int):
 
 def rwkv_decode(p, cfg: ModelConfig, x: jax.Array, state) -> Tuple[jax.Array, dict]:
     """Single-token RWKV layer step (time mix only; channel mix separate).
-    x: (B,1,D)."""
+    x: (B,1,D).  Same per-row contract as ``mamba_decode``: the tm_x/wkv
+    state advance never mixes rows, so per-row freeze/scatter is exact."""
     B, _, D = x.shape
     H, hd = rwkv_dims(cfg)
     prev = state["tm_x"][:, None, :].astype(x.dtype)

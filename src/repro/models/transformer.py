@@ -273,7 +273,9 @@ def lm_prefill(params, cfg: ModelConfig, tokens, cache, embeds=None,
     """True full-sequence prefill: ONE forward through the train-path math
     that also fills the decode cache — replacing the O(P) token-by-token
     Python loop.  Returns (logits (B, S_total, V), cache ready for decode at
-    index S_total)."""
+    per-row cursor ``index = full((B,), S_total)``); a continuous-batching
+    engine prefills one request at a time (B=1, the prompt's exact length)
+    and scatters the row into a freed slot of the live batch cache."""
     x = embed_tokens(params, cfg, tokens, embeds)
     B, S = x.shape[0], x.shape[1]
     if positions is None:
@@ -329,14 +331,19 @@ def _decode_layer(lp, cache_l, cfg: ModelConfig, i: int, x, index, positions):
 
 def lm_decode_step(params, cfg: ModelConfig, tokens, cache, index,
                    positions=None):
-    """tokens: (B, 1) -> (logits (B, 1, V), new_cache).  `index` is the number
-    of tokens already in the cache (absolute position of the new token)."""
+    """tokens: (B, 1) -> (logits (B, 1, V), new_cache).  `index` (B,) int32 is
+    the number of tokens already in each row's cache (the absolute position
+    of that row's new token); a scalar broadcasts for uniform batches.  Rows
+    are fully independent — every row embeds, attends, and writes its cache
+    at its own cursor — which is what lets a continuous-batching scheduler
+    decode requests at unrelated positions in one compiled step."""
     B = tokens.shape[0]
+    index = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (B,))
     x = embed_tokens(params, cfg, tokens, offset=0)
     if cfg.position == "absolute":
-        x = params["embed"][tokens] + params["pos_embed"][index][None, None, :]
+        x = params["embed"][tokens] + params["pos_embed"][index][:, None, :]
     if positions is None:
-        pos = jnp.full((B, 1), index)
+        pos = index[:, None]
         positions = jnp.broadcast_to(pos[None], (3, B, 1)) \
             if cfg.position == "mrope" else pos
     n_super = num_superblocks(params)

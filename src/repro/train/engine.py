@@ -24,7 +24,10 @@ contract:
     reshape/concat, never a host transfer.
   * Checkpoints gather to host (elastic: restore re-shards onto whatever
     mesh the restoring run uses, including a different device count), and
-    every expansion boundary is checkpointed.
+    every expansion boundary is checkpointed.  With ``async_ckpt=True``
+    (default) the gather + file write overlap the next train step via
+    ``checkpoint.AsyncCheckpointer`` (device-side snapshot first — the
+    train step donates the originals; only the manifest is fsync'd).
 
 ``repro.train.loop.train`` wraps this engine with a degenerate 1x1 mesh,
 keeping the historical single-device API (and bit-exact numerics) intact.
@@ -70,7 +73,7 @@ class ProgressiveTrainer:
                  data: Optional[SyntheticLM] = None, eval_batches=None,
                  dtype=jnp.float32, log_fn: Callable = print,
                  fsdp: bool = True, layout: str = "tp",
-                 moe_fsdp: str = "auto"):
+                 moe_fsdp: str = "auto", async_ckpt: bool = True):
         if tcfg.global_batch % max(tcfg.grad_accum, 1):
             raise ValueError(f"global_batch {tcfg.global_batch} not divisible "
                              f"by grad_accum {tcfg.grad_accum}")
@@ -92,6 +95,10 @@ class ProgressiveTrainer:
         self.fsdp = fsdp
         self.layout = layout
         self.moe_fsdp = moe_fsdp
+        # Async checkpointing (ROADMAP): the device->host gather and file
+        # write overlap the next train step (the checkpointer snapshots on
+        # device first — params/opt-state are donated into that step).
+        self._ckptr = ckpt.AsyncCheckpointer() if async_ckpt else None
 
         dcfg = DataConfig(vocab_size=model_cfg.vocab_size,
                           seq_len=tcfg.seq_len,
@@ -212,11 +219,12 @@ class ProgressiveTrainer:
 
         def save(step):
             if self.checkpoint_dir:
-                ckpt.save(self.checkpoint_dir, step,
-                          {"params": params, "opt_state": opt_state},
-                          metadata={"num_layers": cur_layers,
-                                    "name": model_cfg.name},
-                          keep=tcfg.keep_checkpoints)
+                saver = self._ckptr.save if self._ckptr else ckpt.save
+                saver(self.checkpoint_dir, step,
+                      {"params": params, "opt_state": opt_state},
+                      metadata={"num_layers": cur_layers,
+                                "name": model_cfg.name},
+                      keep=tcfg.keep_checkpoints)
 
         for step in range(start_step, tcfg.total_steps):
             # ---- depth expansion at τ (paper's technique) ------------------
@@ -269,5 +277,7 @@ class ProgressiveTrainer:
                 save(step)
 
         save(tcfg.total_steps)
+        if self._ckptr is not None:     # drain (and surface) in-flight write
+            self._ckptr.wait()
         return TrainResult(history=history, params=params,
                            opt_state=opt_state, final_layers=cur_layers)

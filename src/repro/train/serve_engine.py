@@ -21,9 +21,18 @@ discipline.  The contract:
   * The same engine runs a 1x1 mesh (exact single-device numerics — the
     ``serve_lib.Generator`` wrapper) or any (data, model) production mesh;
     a depth-expanded checkpoint serves through the identical code path.
+  * Decode cursors are PER ROW (``index: (B,)``): every row reads/writes
+    its cache at its own position.  On top of that the engine exposes the
+    continuous-batching primitives (``continuous_state`` /
+    ``prefill_request`` / ``admit_request`` / ``decode_masked``) that
+    ``repro.train.serve_scheduler.ContinuousScheduler`` drives: single-
+    request B=1 prefill at the exact prompt length, compiled scatter of the
+    prefilled row into a freed slot, and a masked decode step whose
+    inactive rows are exact no-ops.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import os
@@ -40,6 +49,28 @@ from repro.launch import mesh as mesh_lib
 from repro.models import common as model_common
 from repro.models import registry
 from repro.train import steps as steps_lib
+
+
+@dataclasses.dataclass
+class ContinuousState:
+    """Device-resident continuous-batching decode state (one per serve run).
+
+    ``tokens`` holds each row's next input token, ``index`` the per-row
+    decode cursor, ``active`` which rows are live, ``limit`` each row's stop
+    cursor (prompt_len + max_new - 1).  Everything stays on device between
+    iterations; the scheduler fetches (tokens, active) once per step to
+    stream results and detect termination.
+    """
+    tokens: object            # (B, 1) int32
+    cache: object             # decode cache pytree
+    index: object             # (B,) int32 per-row cursor
+    active: object            # (B,) bool
+    limit: object             # (B,) int32
+    key: object               # PRNG key (threaded through sampling)
+
+    @property
+    def batch(self) -> int:
+        return self.tokens.shape[0]
 
 
 @dataclasses.dataclass
@@ -80,7 +111,33 @@ class ServeEngine:
             p_struct, self.mesh, fsdp=fsdp, moe_fsdp=moe_fsdp, layout=layout)
         self.params = jax.device_put(params, self.param_shardings)
         self._replicated = shd.replicated(self.mesh)
-        self._built = {}              # (B, temperature) -> compiled steps
+        self._built = {}              # (B, sample?) -> compiled steps
+        self._cont_built = {}         # (B, sample?) -> continuous steps
+        self._dev_scalars = {}        # (dtype, value) -> replicated device put
+
+    def _dev_scalar(self, value, dtype):
+        """Replicated device scalar, uploaded once per distinct value: the
+        per-token decode loop must not pay an H2D transfer for a constant
+        (temperature / eos id)."""
+        key = (np.dtype(dtype).str, value)
+        if key not in self._dev_scalars:
+            self._dev_scalars[key] = jax.device_put(dtype(value),
+                                                    self._replicated)
+        return self._dev_scalars[key]
+
+    @contextlib.contextmanager
+    def activation_context(self):
+        """Register this engine's mesh + activation layout for maybe_shard
+        while tracing/compiling model code (restores the previous state)."""
+        prev_mesh = model_common.get_active_mesh()
+        prev_layout = model_common.get_activation_layout()
+        model_common.set_active_mesh(self.mesh)
+        model_common.set_activation_layout(self.layout)
+        try:
+            yield
+        finally:
+            model_common.set_active_mesh(prev_mesh)
+            model_common.set_activation_layout(prev_layout)
 
     # -- sharding resolution / compilation ----------------------------------
 
@@ -142,26 +199,24 @@ class ServeEngine:
             raise ValueError(f"prompt {P} + gen {num_tokens} exceeds "
                              f"max_len {self.max_len}")
         prefill, decode, sh, init_cache = self._steps(B, temperature)
-        prev_mesh = model_common.get_active_mesh()
-        prev_layout = model_common.get_activation_layout()
-        model_common.set_active_mesh(self.mesh)
-        model_common.set_activation_layout(self.layout)
-        try:
+        with self.activation_context():
             cache = init_cache(self.params)
             toks = jax.device_put(prompts, sh.tokens)
             key = jax.device_put(jax.random.PRNGKey(seed), self._replicated)
-            temp = jax.device_put(np.float32(max(temperature, 1e-6)),
-                                  self._replicated)
+            # Greedy executables take no temperature (argmax has none);
+            # sampling ones take it as a traced operand.
+            temp = (self._dev_scalar(temperature, np.float32),
+                    ) if temperature > 0 else ()
             t0 = time.perf_counter()
             nxt, logits, cache, index, key = prefill(self.params, toks,
-                                                     cache, temp, key)
+                                                     cache, *temp, key)
             jax.block_until_ready(nxt)
             t1 = time.perf_counter()
             out: List = [nxt]
             logs: Optional[List] = [logits] if collect_logits else None
             for _ in range(num_tokens - 1):
                 nxt, logits, cache, index, key = decode(self.params, nxt,
-                                                        cache, index, temp,
+                                                        cache, index, *temp,
                                                         key)
                 out.append(nxt)
                 if logs is not None:
@@ -169,9 +224,6 @@ class ServeEngine:
             tokens = jnp.concatenate([toks] + out, axis=1)
             jax.block_until_ready(tokens)
             t2 = time.perf_counter()
-        finally:
-            model_common.set_active_mesh(prev_mesh)
-            model_common.set_activation_layout(prev_layout)
         return tokens, logs, (t1 - t0, t2 - t1)
 
     def generate(self, prompts, num_tokens: int, temperature: float = 0.0,
@@ -188,3 +240,110 @@ class ServeEngine:
         return GenerateResult(np.asarray(tokens), steps=num_tokens,
                               prefill_tokens=prompts.shape[1], logits=logits,
                               prefill_s=pf_s, decode_s=dec_s)
+
+    # -- continuous batching (per-row cursors + slot admission) -------------
+
+    def _cont_steps(self, batch: int, temperature: float):
+        """Compiled (prefill1, decode_masked, admit, sh, sh1, init_cache,
+        init_row_cache) for continuous batching at one batch size.
+
+        ``prefill1`` is the B=1 single-request prefill (jit re-specializes
+        per prompt length under the hood); ``decode_masked`` is the batch
+        decode step with per-row active/limit termination; ``admit``
+        scatters a prefilled row into a freed slot."""
+        key = (batch, temperature > 0)
+        if key not in self._cont_built:
+            sample = temperature > 0
+            sh = self._shardings(batch)
+            sh1 = self._shardings(1)
+            prefill1 = steps_lib.make_prefill_step(
+                self.cfg, sample=sample, shardings=sh1)
+            decode = steps_lib.make_serve_decode_step(
+                self.cfg, sample=sample, shardings=sh, masked=True)
+            admit = steps_lib.make_admit_step(
+                shardings=sh, row_cache_shardings=sh1.cache)
+            init_cache = jax.jit(
+                functools.partial(self.api.init_cache, cfg=self.cfg,
+                                  batch_size=batch, max_len=self.max_len,
+                                  dtype=self.cache_dtype),
+                out_shardings=sh.cache)
+            init_row_cache = jax.jit(
+                functools.partial(self.api.init_cache, cfg=self.cfg,
+                                  batch_size=1, max_len=self.max_len,
+                                  dtype=self.cache_dtype),
+                out_shardings=sh1.cache)
+            self._cont_built[key] = (prefill1, decode, admit, sh, sh1,
+                                     init_cache, init_row_cache)
+        return self._cont_built[key]
+
+    def continuous_state(self, batch: int, temperature: float = 0.0,
+                         seed: int = 0) -> ContinuousState:
+        """Fresh all-slots-free decode state (compiles the continuous
+        steps for this batch size)."""
+        _, _, _, sh, _, init_cache, _ = self._cont_steps(batch, temperature)
+        with self.activation_context():
+            cache = init_cache(self.params)
+            r = self._replicated
+            return ContinuousState(
+                tokens=jax.device_put(np.zeros((batch, 1), np.int32),
+                                      sh.tokens),
+                cache=cache,
+                index=jax.device_put(np.zeros((batch,), np.int32), r),
+                active=jax.device_put(np.zeros((batch,), bool), r),
+                limit=jax.device_put(np.zeros((batch,), np.int32), r),
+                key=jax.device_put(jax.random.PRNGKey(seed), r))
+
+    def prefill_request(self, state: ContinuousState, prompt,
+                        temperature: float = 0.0):
+        """ONE request's compiled B=1 prefill at its exact prompt length.
+
+        Returns ``(state, first_token (1,1) device, row_cache)`` — nothing
+        touches live batch rows; the caller decides (on host) whether the
+        request is already finished (eos / max_new == 1) or should be
+        admitted into a slot via :meth:`admit_request`."""
+        prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+        if prompt.shape[1] >= self.max_len:
+            raise ValueError(f"prompt {prompt.shape[1]} exceeds max_len "
+                             f"{self.max_len}")
+        prefill1, _, _, _, sh1, _, init_row = self._cont_steps(
+            state.batch, temperature)
+        with self.activation_context():
+            row_cache = init_row(self.params)
+            toks = jax.device_put(prompt, sh1.tokens)
+            temp = (self._dev_scalar(temperature, np.float32),
+                    ) if temperature > 0 else ()
+            tok, _, row_cache, _, key = prefill1(self.params, toks,
+                                                 row_cache, *temp, state.key)
+        return dataclasses.replace(state, key=key), tok, row_cache
+
+    def admit_request(self, state: ContinuousState, row: int, first_token,
+                      row_cache, prompt_len: int, max_new_tokens: int,
+                      temperature: float = 0.0) -> ContinuousState:
+        """Scatter a prefilled request into batch slot ``row`` (compiled;
+        donates the live state; other rows untouched)."""
+        _, _, admit, _, _, _, _ = self._cont_steps(state.batch, temperature)
+        with self.activation_context():
+            cache, tokens, index, active, limit = admit(
+                state.cache, state.tokens, state.index, state.active,
+                state.limit, row_cache, first_token,
+                np.int32(prompt_len),
+                np.int32(prompt_len + max_new_tokens - 1), np.int32(row))
+        return dataclasses.replace(state, cache=cache, tokens=tokens,
+                                   index=index, active=active, limit=limit)
+
+    def decode_masked(self, state: ContinuousState, temperature: float = 0.0,
+                      eos_id: int = -1) -> ContinuousState:
+        """One continuous-batching decode iteration over all slots.
+
+        Active rows advance (sample, write cache at their own cursor) and
+        self-terminate on eos / per-row limit; inactive rows are no-ops."""
+        _, decode, _, _, _, _, _ = self._cont_steps(state.batch, temperature)
+        with self.activation_context():
+            temp = (self._dev_scalar(temperature, np.float32),
+                    ) if temperature > 0 else ()
+            tokens, _, cache, index, active, key = decode(
+                self.params, state.tokens, state.cache, state.index,
+                state.active, state.limit,
+                self._dev_scalar(eos_id, np.int32), *temp, state.key)
+        return dataclasses.replace(state, tokens=tokens, cache=cache,
+                                   index=index, active=active, key=key)

@@ -1,11 +1,17 @@
 """Batched serving: thin single-device wrapper over the serve engine.
 
-``Generator`` keeps the historical single-device API (same pattern as
+``Generator`` keeps the historical batch-to-completion API (same pattern as
 ``loop.train`` over ``train/engine.ProgressiveTrainer``): it drives
 ``repro.train.serve_engine.ServeEngine`` under a degenerate 1x1 mesh, so the
 exact sharded code path — one compiled full-sequence prefill, donated-cache
 decode with fused sampling — runs with single-device numerics.  Pass
 ``mesh=`` to serve sharded.
+
+For real traffic shapes (staggered arrivals, ragged prompt/output lengths)
+use ``repro.train.serve_scheduler.ContinuousScheduler`` (re-exported here):
+iteration-level scheduling over per-row cache cursors, admitting queued
+requests into freed slots instead of stalling the batch on its longest
+request.
 """
 from __future__ import annotations
 
@@ -14,8 +20,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.train.serve_engine import GenerateResult, ServeEngine
+from repro.train.serve_scheduler import (ContinuousScheduler, Request,
+                                         RequestResult)
 
-__all__ = ["Generator", "GenerateResult", "ServeEngine"]
+__all__ = ["Generator", "GenerateResult", "ServeEngine",
+           "ContinuousScheduler", "Request", "RequestResult"]
 
 
 class Generator:

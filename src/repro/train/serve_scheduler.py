@@ -1,0 +1,193 @@
+"""Continuous-batching request scheduler (Orca-style iteration-level
+scheduling, as popularized by vLLM) over ``ServeEngine``'s per-row-cursor
+decode path.
+
+The engine's batch-to-completion loop stalls every cache row on the longest
+request; the scheduler instead treats the decode batch as ``max_batch``
+*slots*:
+
+  * each arriving request is prefilled ALONE (one compiled B=1 forward at
+    its exact prompt length — no padding) and scattered into a freed slot
+    with a compiled admit step that leaves live rows untouched;
+  * every iteration runs ONE masked decode step across all slots — each row
+    samples and writes its cache at its own cursor, self-terminating on EOS
+    or its per-row token budget, while free slots are exact no-ops;
+  * finished sequences are streamed out (``on_finish``) the iteration they
+    terminate, and their slot is re-admitted on the same iteration.
+
+Between iterations only the (B,) sampled tokens + active mask cross to the
+host — the fetch the scheduler needs anyway to stream results and detect
+termination; caches, cursors, and the PRNG key stay donated on device.
+
+Greedy decoding is deterministic per request: a request's token stream is
+byte-identical to running it alone through ``ServeEngine.generate``
+(per-row math is independent of co-scheduled rows).  Temperature sampling
+draws from one PRNG stream shared across slots, so sampled streams depend
+on scheduling order — reproducible per (seed, arrival order), not per
+request.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.train.serve_engine import ServeEngine
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``arrival_s`` is relative to scheduler
+    start; 0 means already queued (admission then staggers naturally as
+    slots free up)."""
+    prompt: np.ndarray                # (P,) int32
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    uid: Optional[int] = None         # assigned by the scheduler if None
+
+
+@dataclasses.dataclass
+class RequestResult:
+    uid: int
+    prompt: np.ndarray                # (P,) int32
+    new_tokens: np.ndarray            # (G,) int32 generated tokens (EOS incl.)
+    finish_reason: str                # 'eos' | 'length'
+    slot: int                         # cache row served in (-1: never slotted)
+    arrival_s: float
+    admitted_s: float                 # prefill completion (= first token)
+    finished_s: float
+
+    @property
+    def tokens(self) -> np.ndarray:
+        return np.concatenate([self.prompt, self.new_tokens])
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token: arrival -> first sampled token (prefill)."""
+        return self.admitted_s - self.arrival_s
+
+
+class ContinuousScheduler:
+    """Request queue + slot allocator over a ``ServeEngine`` (see module
+    docstring)."""
+
+    def __init__(self, engine: ServeEngine, max_batch: int = 4,
+                 temperature: float = 0.0, eos_id: int = -1, seed: int = 0,
+                 time_fn: Callable[[], float] = time.perf_counter,
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 poll_s: float = 1e-3):
+        if max_batch < 1:
+            raise ValueError(f"max_batch {max_batch} < 1")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.temperature = temperature
+        self.eos_id = eos_id if eos_id is not None else -1
+        self.seed = seed
+        self.time_fn = time_fn                 # virtual clocks: pair with a
+        self.sleep_fn = sleep_fn               # matching sleep_fn
+        self.poll_s = poll_s
+
+    def warmup(self, requests: Sequence[Request]):
+        """Compile every executable a serving run will need — the masked
+        decode/admit steps and one B=1 prefill per distinct prompt length
+        (= per length bucket) — outside the timed/served path."""
+        seen = {len(np.asarray(r.prompt).ravel()): r.prompt
+                for r in requests}
+        self.run([Request(prompt=p, max_new_tokens=2)
+                  for p in seen.values()])
+
+    def run(self, requests: Sequence[Request],
+            on_finish: Optional[Callable[[RequestResult], None]] = None
+            ) -> List[RequestResult]:
+        """Serve all requests; returns results in submission order."""
+        reqs = []
+        for i, r in enumerate(requests):
+            uid = r.uid if r.uid is not None else i
+            reqs.append(dataclasses.replace(
+                r, uid=uid, prompt=np.asarray(r.prompt, np.int32).ravel()))
+        if len({r.uid for r in reqs}) != len(reqs):
+            raise ValueError("duplicate request uids")
+        for r in reqs:
+            if r.max_new_tokens < 1:
+                raise ValueError(f"request {r.uid}: max_new_tokens < 1")
+            if len(r.prompt) + r.max_new_tokens > self.engine.max_len:
+                raise ValueError(
+                    f"request {r.uid}: prompt {len(r.prompt)} + gen "
+                    f"{r.max_new_tokens} exceeds max_len {self.engine.max_len}")
+
+        pending = deque(sorted(reqs, key=lambda r: r.arrival_s))
+        state = self.engine.continuous_state(
+            self.max_batch, temperature=self.temperature, seed=self.seed)
+        free = list(range(self.max_batch))[::-1]   # pop() -> row 0 first
+        live: dict = {}                            # row -> (req, [tokens])
+        done: dict = {}
+        t0 = self.time_fn()
+
+        def finish(req, tokens, slot, t_first, now):
+            reason = ("eos" if self.eos_id >= 0 and tokens
+                      and tokens[-1] == self.eos_id else "length")
+            res = RequestResult(
+                uid=req.uid, prompt=req.prompt,
+                new_tokens=np.asarray(tokens, np.int32),
+                finish_reason=reason, slot=slot, arrival_s=req.arrival_s,
+                admitted_s=t_first, finished_s=now)
+            done[req.uid] = res
+            if on_finish is not None:
+                on_finish(res)
+
+        while pending or live:
+            now = self.time_fn() - t0
+            # ---- admit arrived requests into free slots -------------------
+            while free and pending and pending[0].arrival_s <= now:
+                req = pending.popleft()
+                state, tok, row_cache = self.engine.prefill_request(
+                    state, req.prompt, temperature=self.temperature)
+                first = int(np.asarray(tok)[0, 0])
+                t_first = self.time_fn() - t0
+                if req.max_new_tokens == 1 or \
+                        (self.eos_id >= 0 and first == self.eos_id):
+                    finish(req, [first], -1, t_first, t_first)
+                    continue
+                row = free.pop()
+                state = self.engine.admit_request(
+                    state, row, tok, row_cache, len(req.prompt),
+                    req.max_new_tokens, temperature=self.temperature)
+                live[row] = (req, [first], t_first)
+            if not live:
+                if pending:            # idle until the next arrival
+                    wait = pending[0].arrival_s - (self.time_fn() - t0)
+                    if wait > 0:
+                        self.sleep_fn(min(wait, self.poll_s))
+                continue
+            # ---- one masked decode iteration across all slots -------------
+            state = self.engine.decode_masked(
+                state, temperature=self.temperature, eos_id=self.eos_id)
+            toks = np.asarray(state.tokens)[:, 0]
+            act = np.asarray(state.active)
+            now = self.time_fn() - t0
+            for row in list(live):
+                req, out, t_first = live[row]
+                out.append(int(toks[row]))
+                if not act[row]:       # terminated: stream out, free slot
+                    finish(req, out, row, t_first, now)
+                    del live[row]
+                    free.append(row)
+        return [done[r.uid if r.uid is not None else i]
+                for i, r in enumerate(requests)]
+
+
+def summarize(results: Sequence[RequestResult], wall_s: float) -> dict:
+    """Aggregate serving metrics: useful-token throughput + TTFT tail."""
+    gen = int(sum(len(r.new_tokens) for r in results))
+    ttft = np.sort([r.ttft_s for r in results]) if results else np.zeros(1)
+    return {
+        "requests": len(results),
+        "generated_tokens": gen,
+        "wall_s": wall_s,
+        "tokens_per_s": gen / max(wall_s, 1e-9),
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p95_s": float(np.percentile(ttft, 95)),
+    }

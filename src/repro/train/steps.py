@@ -138,8 +138,9 @@ def make_eval_step(cfg: ModelConfig,
 
 def make_decode_step(cfg: ModelConfig, donate_cache: bool = True,
                      shardings: Optional["ServeShardings"] = None) -> Callable:
-    """(params, tokens(B,1), cache, index) -> (logits, cache).  The cache is
-    donated: decode updates in place on device."""
+    """(params, tokens(B,1), cache, index(B,)) -> (logits, cache).  The cache
+    is donated: decode updates in place on device.  `index` is the per-row
+    cursor (a scalar broadcasts)."""
     api = registry.get_model(cfg)
 
     def fn(params, tokens, cache, index):
@@ -192,65 +193,174 @@ def _sample(logits, temp, key, sample: bool):
 def make_prefill_step(cfg: ModelConfig, sample: bool = False,
                       donate_cache: bool = True,
                       shardings: Optional[ServeShardings] = None) -> Callable:
-    """(params, prompts(B,P), cache, temp, key) ->
-           (next_token(B,1), last_logits(B,1,V), cache, index, key).
+    """(params, prompts(B,P), cache[, temp], key) ->
+           (next_token(B,1), last_logits(B,1,V), cache, index(B,), key).
 
     ONE compiled forward fills the whole cache (no per-token Python loop)
     and samples the first generated token on device; `index` comes back as
-    the on-device decode cursor (= P), so the autoregressive loop that
-    follows never touches the host.  Only the last position's logits leave
-    the step: returning all (B,P,V) would force XLA to keep the lm_head
-    matmul for every prompt position (P x the needed prefill head cost)."""
+    the on-device PER-ROW decode cursor (= full((B,), P)), so the
+    autoregressive loop that follows never touches the host.  Only the last
+    position's logits leave the step: returning all (B,P,V) would force XLA
+    to keep the lm_head matmul for every prompt position (P x the needed
+    prefill head cost).  The greedy executable (sample=False) takes no
+    ``temp`` operand — argmax has no temperature, so the dead scalar is
+    dropped from the signature."""
     api = registry.get_model(cfg)
     if api.prefill is None:
         raise NotImplementedError(f"{cfg.name}: no prefill path for this arch")
 
-    def fn(params, prompts, cache, temp, key):
+    def body(params, prompts, cache, temp, key):
         logits, cache = api.prefill(params, cfg, prompts, cache)
         last = logits[:, -1:]
         nxt, key = _sample(last[:, 0], temp, key, sample)
-        index = jnp.asarray(prompts.shape[1], jnp.int32)
+        index = jnp.full((prompts.shape[0],), prompts.shape[1], jnp.int32)
         return nxt[:, None].astype(jnp.int32), last, cache, index, key
+
+    if sample:
+        fn = body
+    else:
+        def fn(params, prompts, cache, key):
+            return body(params, prompts, cache, None, key)
 
     donate = (2,) if donate_cache else ()
     if shardings is None:
         return jax.jit(fn, donate_argnums=donate)
+    r = shardings.replicated
+    temp_in = (r,) if sample else ()
     return jax.jit(
         fn,
-        in_shardings=(shardings.params, shardings.tokens, shardings.cache,
-                      shardings.replicated, shardings.replicated),
+        in_shardings=(shardings.params, shardings.tokens, shardings.cache)
+                     + temp_in + (r,),
         out_shardings=(shardings.tokens, shardings.logits, shardings.cache,
-                       shardings.replicated, shardings.replicated),
+                       r, r),
         donate_argnums=donate)
 
 
 def make_serve_decode_step(cfg: ModelConfig, sample: bool = False,
                            donate_cache: bool = True,
-                           shardings: Optional[ServeShardings] = None) -> Callable:
-    """(params, token(B,1), cache, index, temp, key) ->
-           (next_token(B,1), logits(B,1,V), cache, index+1, key).
+                           shardings: Optional[ServeShardings] = None,
+                           masked: bool = False) -> Callable:
+    """Fused decode + sampling, one device round-trip per generated token.
 
-    Decode + sampling fused into one jit: the loop does one device
-    round-trip per generated token instead of three (logits fetch, host
-    sample, token upload), and the cache is donated so decode updates the
-    same device buffers every step."""
+    Batch-to-completion (``masked=False``):
+        (params, token(B,1), cache, index(B,)[, temp], key) ->
+            (next_token(B,1), logits(B,1,V), cache, index+1, key)
+
+    Continuous batching (``masked=True``) adds iteration-level termination:
+        (params, token(B,1), cache, index(B,), active(B,) bool,
+         limit(B,), eos[, temp], key) ->
+            (next_token(B,1), logits(B,1,V), cache, index', active', key)
+
+    Inactive rows are exact no-ops: their sampled token is masked to 0,
+    their cursor does not advance, and their cache/state rows are frozen by
+    a per-row select against the (donated) input cache — so a freed slot
+    holds its last state unchanged until the scheduler scatters a new
+    request into it.  A row deactivates itself when it samples ``eos``
+    (pass -1 to disable) or when its cursor reaches its per-row ``limit``
+    (= prompt_len + max_new_tokens - 1; the prefill emits token #1).
+    Logits of inactive rows are garbage — callers mask on ``active``.
+
+    The greedy executable takes no ``temp`` operand (dead for argmax);
+    ``temp``/``eos`` are traced scalars, so all temperatures and stop
+    tokens share one executable per (batch, mode)."""
     api = registry.get_model(cfg)
 
-    def fn(params, tokens, cache, index, temp, key):
+    def core(params, tokens, cache, index, temp, key):
         logits, cache = api.decode_step(params, cfg, tokens, cache, index)
         nxt, key = _sample(logits[:, -1], temp, key, sample)
-        return nxt[:, None].astype(jnp.int32), logits, cache, index + 1, key
+        return nxt, logits, cache, key
+
+    if not masked:
+        def body(params, tokens, cache, index, temp, key):
+            nxt, logits, cache, key = core(params, tokens, cache, index,
+                                           temp, key)
+            return (nxt[:, None].astype(jnp.int32), logits, cache,
+                    index + 1, key)
+        n_state = 4          # tokens, cache, index, [temp], key follow params
+    else:
+        def body(params, tokens, cache, index, active, limit, eos, temp, key):
+            nxt, logits, new_cache, key = core(params, tokens, cache, index,
+                                               temp, key)
+            nxt = jnp.where(active, nxt, 0).astype(jnp.int32)
+            new_index = index + active.astype(index.dtype)
+            new_active = active & (nxt != eos) & (new_index < limit)
+
+            def freeze(new, old):
+                keep = active.reshape((1, active.shape[0])
+                                      + (1,) * (new.ndim - 2))
+                return jnp.where(keep, new, old)
+            cache = jax.tree.map(freeze, new_cache, cache)
+            return (nxt[:, None], logits, cache, new_index, new_active, key)
+        n_state = 7          # tokens, cache, index, active, limit, eos + key
+
+    if sample:
+        fn = body
+    elif not masked:
+        def fn(params, tokens, cache, index, key):
+            return body(params, tokens, cache, index, None, key)
+    else:
+        def fn(params, tokens, cache, index, active, limit, eos, key):
+            return body(params, tokens, cache, index, active, limit, eos,
+                        None, key)
 
     donate = (2,) if donate_cache else ()
     if shardings is None:
         return jax.jit(fn, donate_argnums=donate)
+    r = shardings.replicated
+    pre = (shardings.params, shardings.tokens, shardings.cache)
+    state_in = (r,) * (n_state - 3) + ((r,) if sample else ()) + (r,)
+    out = (shardings.tokens, shardings.logits, shardings.cache) \
+        + (r,) * (3 if masked else 2)      # index[, active], key
+    return jax.jit(fn, in_shardings=pre + state_in, out_shardings=out,
+                   donate_argnums=donate)
+
+
+def make_admit_step(shardings: Optional[ServeShardings] = None,
+                    row_cache_shardings=None) -> Callable:
+    """(cache, tokens, index, active, limit,
+        row_cache, row_tok(1,1), row_len, row_limit, row) ->
+           (cache, tokens, index, active, limit).
+
+    Scatters ONE freshly prefilled request (a B=1 cache pytree + its first
+    sampled token) into batch slot ``row`` of the live decode state.  All
+    big operands are donated, every update is a dynamic slice at the row
+    index, and other rows' buffers are untouched — admission never perturbs
+    in-flight requests.  ``row``/``row_len``/``row_limit`` are traced
+    scalars: one executable serves every slot and request shape."""
+
+    def fn(cache, tokens, index, active, limit,
+           row_cache, row_tok, row_len, row_limit, row):
+        row = jnp.asarray(row, jnp.int32)
+
+        def put(big, r):
+            starts = (jnp.int32(0), row) + (jnp.int32(0),) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(big, r.astype(big.dtype),
+                                                starts)
+        cache = jax.tree.map(put, cache, row_cache)
+        tokens = jax.lax.dynamic_update_slice(
+            tokens, row_tok.astype(tokens.dtype), (row, jnp.int32(0)))
+        index = jax.lax.dynamic_update_slice(
+            index, jnp.asarray(row_len, index.dtype)[None], (row,))
+        # limit = prompt_len + max_new - 1 (the prefill emitted token #1):
+        # max_new == 1 admits an already-finished row, which stays inactive.
+        active = jax.lax.dynamic_update_slice(
+            active, (jnp.asarray(row_len, jnp.int32)
+                     < jnp.asarray(row_limit, jnp.int32))[None], (row,))
+        limit = jax.lax.dynamic_update_slice(
+            limit, jnp.asarray(row_limit, limit.dtype)[None], (row,))
+        return cache, tokens, index, active, limit
+
+    donate = (0, 1, 2, 3, 4)
+    if shardings is None:
+        return jax.jit(fn, donate_argnums=donate)
+    r = shardings.replicated
+    row_sh = row_cache_shardings if row_cache_shardings is not None \
+        else jax.tree.map(lambda _: r, shardings.cache)
     return jax.jit(
         fn,
-        in_shardings=(shardings.params, shardings.tokens, shardings.cache,
-                      shardings.replicated, shardings.replicated,
-                      shardings.replicated),
-        out_shardings=(shardings.tokens, shardings.logits, shardings.cache,
-                       shardings.replicated, shardings.replicated),
+        in_shardings=(shardings.cache, shardings.tokens, r, r, r,
+                      row_sh, r, r, r, r),
+        out_shardings=(shardings.cache, shardings.tokens, r, r, r),
         donate_argnums=donate)
 
 

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Canonical tier-1 test entrypoint (olmax-style).
 #
-#   bash test.sh                      # full suite
+#   bash test.sh                      # full suite (tier-1; includes
+#                                     # tests/test_serving_continuous.py)
 #   bash test.sh tests/test_core.py   # one module
 #   bash test.sh -m "not slow"        # skip the multi-device parity tests
 #

@@ -191,13 +191,12 @@ def test_engine_cache_shardings_and_donation():
                  pytest.fail(f"{x.sharding} != {s}"), cache, sh.cache)
     toks = jax.device_put(_prompts(CFG_DENSE, B=B, P=4), sh.tokens)
     key = jax.device_put(jax.random.PRNGKey(0), sh.replicated)
-    temp = jax.device_put(np.float32(1.0), sh.replicated)
-    nxt, _, cache, index, key = prefill(eng.params, toks, cache, temp, key)
+    # greedy executables take no temperature operand (dead for argmax)
+    nxt, _, cache, index, key = prefill(eng.params, toks, cache, key)
     jax.tree.map(lambda x, s: None if x.sharding == s else
                  pytest.fail(f"{x.sharding} != {s}"), cache, sh.cache)
     old_leaves = jax.tree.leaves(cache)
-    nxt, _, cache, index, key = decode(eng.params, nxt, cache, index, temp,
-                                       key)
+    nxt, _, cache, index, key = decode(eng.params, nxt, cache, index, key)
     jax.tree.map(lambda x, s: None if x.sharding == s else
                  pytest.fail(f"{x.sharding} != {s}"), cache, sh.cache)
     # donated: the previous cache buffers were consumed by the step

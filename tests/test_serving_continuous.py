@@ -1,0 +1,280 @@
+"""Continuous batching on the serve engine (per-row cursors + scheduler).
+
+The scheduler must be a *numerical no-op* relative to solo generation:
+under staggered admission with ragged prompt/generation lengths, every
+request's greedy tokens are byte-identical to running that request alone
+through ``ServeEngine.generate`` — on a 1x1 mesh and on the 8-device
+data-parallel mesh (flags in conftest.py).  Structurally: requests are
+prefilled B=1 at their exact prompt length and scattered into freed slots
+without perturbing live rows; EOS/per-row-budget termination frees slots
+for re-admission; and the per-row ``(B,)`` cursor decode is parity with
+the scalar-cursor contract for uniform batches.
+"""
+import dataclasses
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.launch import mesh as mesh_lib
+from repro.models import registry
+from repro.train import steps as steps_lib
+from repro.train.serve_engine import ServeEngine
+from repro.train.serve_scheduler import (ContinuousScheduler, Request,
+                                         summarize)
+
+CFG_DENSE = ModelConfig(name="cb-dense", family="dense", num_layers=4,
+                        d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                        vocab_size=64, max_seq_len=64)
+CFG_WINDOW = dataclasses.replace(CFG_DENSE, name="cb-window",
+                                 window_pattern=(4, 0))
+CFG_MAMBA = ModelConfig(name="cb-mamba", family="ssm", num_layers=4,
+                        d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
+                        vocab_size=64, max_seq_len=64, attention="none",
+                        position="none", block_pattern=("mamba",),
+                        ssm=SSMConfig(d_state=4))
+CFG_RWKV = ModelConfig(name="cb-rwkv", family="ssm", num_layers=4,
+                       d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
+                       vocab_size=64, max_seq_len=64, attention="none",
+                       position="none", norm="layernorm",
+                       block_pattern=("rwkv",),
+                       ssm=SSMConfig(kind="rwkv6", head_dim=16))
+ARCH_CFGS = {"dense": CFG_DENSE, "window": CFG_WINDOW, "mamba": CFG_MAMBA,
+             "rwkv": CFG_RWKV}
+
+# 8 staggered requests with ragged prompt/generation lengths (prompt, gen).
+REQ_SHAPES = ((5, 7), (9, 4), (3, 10), (6, 2), (4, 8), (7, 5), (2, 6),
+              (8, 3))
+
+
+def _params(cfg, seed=0):
+    return registry.get_model(cfg).init(jax.random.PRNGKey(seed), cfg)
+
+
+def _requests(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (p,)).astype(np.int32),
+                    max_new_tokens=g) for p, g in REQ_SHAPES]
+
+
+def _assert_solo_parity(cfg, engine, requests, results):
+    """Each request's tokens == generating it alone (byte-identical)."""
+    solo = ServeEngine(cfg, engine.params,
+                       mesh=mesh_lib.single_device_mesh(), max_len=48)
+    for req, res in zip(requests, results):
+        want = solo.generate(req.prompt[None, :], req.max_new_tokens).tokens
+        np.testing.assert_array_equal(res.tokens, want[0])
+        assert len(res.new_tokens) == req.max_new_tokens
+        assert res.finish_reason == "length"
+
+
+# ---------------------------------------------------------------------------
+# Staggered admission == solo generation, byte for byte
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", list(ARCH_CFGS))
+def test_continuous_matches_solo_single_device(arch):
+    """max_batch 2 over 8 ragged requests on a 1x1 mesh: every admission
+    lands in a slot freed mid-flight, at a cursor unrelated to the row's
+    previous tenant — tokens must still match solo generation exactly."""
+    cfg = ARCH_CFGS[arch]
+    eng = ServeEngine(cfg, _params(cfg), max_len=48)
+    reqs = _requests(cfg)
+    results = ContinuousScheduler(eng, max_batch=2).run(reqs)
+    _assert_solo_parity(cfg, eng, reqs, results)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", list(ARCH_CFGS))
+def test_continuous_matches_solo_mesh8(arch):
+    """Same parity on the 8-device data-parallel mesh (max_batch 4)."""
+    cfg = ARCH_CFGS[arch]
+    eng = ServeEngine(cfg, _params(cfg),
+                      mesh=mesh_lib.make_train_mesh("host"), max_len=48)
+    reqs = _requests(cfg)
+    results = ContinuousScheduler(eng, max_batch=4).run(reqs)
+    _assert_solo_parity(cfg, eng, reqs, results)
+
+
+# ---------------------------------------------------------------------------
+# EOS termination frees the slot for re-admission
+# ---------------------------------------------------------------------------
+
+
+def test_eos_frees_slot_and_readmits():
+    """A row sampling EOS terminates early (reason 'eos', stream truncated
+    at the stop token) and its freed slot serves the next queued request to
+    completion."""
+    cfg = CFG_DENSE
+    eng = ServeEngine(cfg, _params(cfg), max_len=48)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    solo = eng.generate(prompt[None, :], 12).tokens[0, 6:]
+    # pick the stop token by its FIRST occurrence in the solo greedy stream
+    eos = int(solo[4])
+    cut = int(np.argmax(solo == eos)) + 1
+    other = Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (4,)).astype(np.int32),
+                    max_new_tokens=5)
+    solo2 = eng.generate(other.prompt[None, :], 5).tokens[0, 4:]
+    cut2 = (int(np.argmax(solo2 == eos)) + 1) if eos in solo2 else 5
+    results = ContinuousScheduler(eng, max_batch=1, eos_id=eos).run(
+        [Request(prompt=prompt, max_new_tokens=12), other])
+    assert results[0].finish_reason == "eos"
+    assert results[0].new_tokens[-1] == eos
+    np.testing.assert_array_equal(results[0].new_tokens, solo[:cut])
+    # the second request was admitted into the freed slot and served to its
+    # own termination point (eos truncation applies to it identically)
+    assert results[1].slot == results[0].slot == 0
+    np.testing.assert_array_equal(results[1].new_tokens, solo2[:cut2])
+    assert results[1].finish_reason == ("eos" if cut2 < 5 else "length")
+
+
+def test_immediate_finish_never_occupies_a_slot():
+    """max_new_tokens == 1 (and first-token EOS) complete from the prefill
+    alone: slot == -1 and a single concurrent slot still serves everyone."""
+    cfg = CFG_DENSE
+    eng = ServeEngine(cfg, _params(cfg), max_len=48)
+    rng = np.random.default_rng(4)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (5,)).astype(np.int32),
+                    max_new_tokens=n) for n in (1, 4, 1)]
+    results = ContinuousScheduler(eng, max_batch=1).run(reqs)
+    assert [r.slot for r in results] == [-1, 0, -1]
+    assert [len(r.new_tokens) for r in results] == [1, 4, 1]
+    _assert_solo_parity(cfg, eng, reqs[1:2], results[1:2])
+
+
+# ---------------------------------------------------------------------------
+# Per-row cursor == scalar cursor for uniform batches (PR 2 contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", list(ARCH_CFGS))
+def test_vector_cursor_parity_with_scalar_cursor(arch):
+    """A uniform batch decoded with a per-row (B,) cursor is byte-identical
+    to the scalar-cursor decode (scalars broadcast at the model boundary),
+    so PR 2's batch-to-completion outputs are unchanged."""
+    cfg = ARCH_CFGS[arch]
+    api = registry.get_model(cfg)
+    params = _params(cfg)
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (3, 6)), jnp.int32)
+    cache_s = api.init_cache(params, cfg, 3, 16, dtype=jnp.float32)
+    cache_v = api.init_cache(params, cfg, 3, 16, dtype=jnp.float32)
+    decode = steps_lib.make_decode_step(cfg)
+    for t in range(6):
+        lg_s, cache_s = decode(params, toks[:, t:t + 1], cache_s,
+                               jnp.int32(t))
+        lg_v, cache_v = decode(params, toks[:, t:t + 1], cache_v,
+                               jnp.full((3,), t, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), cache_s, cache_v)
+
+
+def test_divergent_cursors_decode_rows_independently():
+    """Rows at unrelated cursors in ONE step: each row's logits equal the
+    row decoded alone at its own scalar cursor."""
+    cfg = CFG_DENSE
+    api = registry.get_model(cfg)
+    params = _params(cfg)
+    rng = np.random.default_rng(6)
+    B, ML = 3, 16
+    cursors = [2, 7, 5]
+    prompts = [rng.integers(0, cfg.vocab_size, (c,)).astype(np.int32)
+               for c in cursors]
+    nxt = rng.integers(0, cfg.vocab_size, (B, 1)).astype(np.int32)
+    # batch cache: prefill each row alone, scatter rows together
+    solo = []
+    for b in range(B):
+        c1 = api.init_cache(params, cfg, 1, ML, dtype=jnp.float32)
+        _, c1 = jax.jit(lambda p, t, c: api.prefill(p, cfg, t, c))(
+            params, jnp.asarray(prompts[b][None, :]), c1)
+        solo.append(c1)
+    batch_cache = jax.tree.map(
+        lambda *rows: jnp.concatenate(rows, axis=1), *solo)
+    lg, _ = jax.jit(lambda p, t, c, i: api.decode_step(p, cfg, t, c, i))(
+        params, jnp.asarray(nxt), batch_cache,
+        jnp.asarray(cursors, jnp.int32))
+    for b in range(B):
+        lg1, _ = jax.jit(lambda p, t, c, i: api.decode_step(p, cfg, t, c, i))(
+            params, jnp.asarray(nxt[b:b + 1]), solo[b], jnp.int32(cursors[b]))
+        np.testing.assert_allclose(np.asarray(lg[b]), np.asarray(lg1[0]),
+                                   rtol=0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Masked decode step: inactive rows are exact no-ops
+# ---------------------------------------------------------------------------
+
+
+def test_masked_decode_freezes_inactive_rows():
+    cfg = CFG_DENSE
+    eng = ServeEngine(cfg, _params(cfg), max_len=32)
+    state = eng.continuous_state(3)
+    rng = np.random.default_rng(7)
+    # admit rows 0 and 2; row 1 stays free
+    for row in (0, 2):
+        p = rng.integers(0, cfg.vocab_size, (4 + row,)).astype(np.int32)
+        state, tok, rc = eng.prefill_request(state, p)
+        state = eng.admit_request(state, row, tok, rc, len(p), 6)
+    before = jax.tree.map(lambda x: np.asarray(x[:, 1]), state.cache)
+    idx_before = np.asarray(state.index)
+    state = eng.decode_masked(state)
+    after = jax.tree.map(lambda x: np.asarray(x[:, 1]), state.cache)
+    jax.tree.map(np.testing.assert_array_equal, before, after)
+    idx = np.asarray(state.index)
+    assert idx[1] == idx_before[1]              # free row: cursor frozen
+    assert (idx[[0, 2]] == idx_before[[0, 2]] + 1).all()
+    assert np.asarray(state.tokens)[1, 0] == 0  # masked sample
+    act = np.asarray(state.active)
+    assert act[0] and act[2] and not act[1]
+
+
+# ---------------------------------------------------------------------------
+# Greedy executables take no temperature (dead-operand satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_steps_have_no_temperature_operand():
+    eng = ServeEngine(CFG_DENSE, _params(CFG_DENSE), max_len=32)
+    eng.generate(np.zeros((2, 4), np.int32), 2)                # greedy
+    eng.generate(np.zeros((2, 4), np.int32), 2, temperature=0.9)
+    greedy_pf, greedy_dec, _, _ = eng._built[(2, False)]
+    sample_pf, sample_dec, _, _ = eng._built[(2, True)]
+
+    def n_args(jitted):
+        return len(inspect.signature(jitted).parameters)
+
+    # (params, prompts, cache, key) vs (params, prompts, cache, temp, key)
+    assert n_args(greedy_pf) == 4 and n_args(sample_pf) == 5
+    assert n_args(greedy_dec) == 5 and n_args(sample_dec) == 6
+
+
+# ---------------------------------------------------------------------------
+# Scheduler bookkeeping: streaming order, timing fields, summarize
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_streams_in_completion_order():
+    cfg = CFG_DENSE
+    eng = ServeEngine(cfg, _params(cfg), max_len=48)
+    reqs = _requests(cfg, seed=8)
+    order = []
+    results = ContinuousScheduler(eng, max_batch=4).run(
+        reqs, on_finish=lambda r: order.append(r.uid))
+    assert sorted(order) == list(range(len(reqs)))
+    finished = {r.uid: r.finished_s for r in results}
+    assert order == sorted(order, key=lambda u: finished[u])
+    for r in results:
+        assert 0.0 <= r.arrival_s <= r.admitted_s <= r.finished_s
+    stats = summarize(results, wall_s=1.0)
+    assert stats["generated_tokens"] == sum(g for _, g in REQ_SHAPES)
+    assert stats["requests"] == len(reqs)
+    assert stats["ttft_p50_s"] <= stats["ttft_p95_s"]
