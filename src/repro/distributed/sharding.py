@@ -181,26 +181,36 @@ def batch_shardings(batch_specs, mesh: Mesh, layout: str = "tp"):
 def cache_shardings(cache_specs, mesh: Mesh):
     """KV caches / SSM states: batch over 'data', then prefer sharding the
     longest remaining dim (sequence for KV, state dims for SSM) over 'model'.
-    Leading super-block axis (dim 0) is never sharded."""
+    Leading super-block axis (dim 0) is never sharded.
+
+    Paged pool leaves (``k_pages``/``v_pages``; shape (n_super, num_pages,
+    block_size, KV, hd)) carry NO batch dim and any row may address any
+    page, so their page dim is deliberately replicated over the DP axes
+    (sharding it would turn every block-table gather into an all-to-all);
+    only the trailing dims are candidates for the 'model' axis, like a
+    contiguous cache's."""
     sizes = dict(mesh.shape)
     dp = tuple(a for a in ("pod", "data") if a in sizes)
     dp_total = int(np.prod([sizes[a] for a in dp])) if dp else 1
 
-    def one(leaf):
+    def one(path, leaf):
+        names = _leaf_path_names(path)
+        paged = names and names[-1] in ("k_pages", "v_pages")
         shape = leaf.shape
         axes: list = [None] * len(shape)
-        if dp and len(shape) >= 2 and shape[1] % dp_total == 0 \
-                and shape[1] >= dp_total:
+        if not paged and dp and len(shape) >= 2 \
+                and shape[1] % dp_total == 0 and shape[1] >= dp_total:
             axes[1] = dp                       # batch dim (after n_super)
         if "model" in sizes:
-            # longest unsharded dim after batch
+            # longest unsharded dim after batch (after the page dim for
+            # paged pools — pages stay whole)
             cands = sorted(range(2, len(shape)), key=lambda d: -shape[d])
             for d in cands:
                 if shape[d] % sizes["model"] == 0 and shape[d] >= sizes["model"]:
                     axes[d] = "model"
                     break
         return NamedSharding(mesh, P(*axes))
-    return jax.tree.map(one, cache_specs)
+    return jax.tree_util.tree_map_with_path(one, cache_specs)
 
 
 def replicated(mesh: Mesh):

@@ -1,0 +1,120 @@
+"""Pallas TPU paged-attention decode kernel.
+
+One new query per row attends over that row's KV pages through a block
+table, without ever materializing the row's contiguous KV layout in HBM:
+
+  * grid = (batch, kv_heads, logical_blocks) with the block axis innermost
+    and sequential; online-softmax statistics (m, l) and the output
+    accumulator live in VMEM scratch carried across block iterations —
+    the same discipline as ``kernels.flash_attention.kernel``;
+  * the block table and per-row cursors are **scalar-prefetched**
+    (``PrefetchScalarGridSpec``): the K/V BlockSpec index maps read
+    ``table[b, j]`` to DMA the *physical* page backing logical block j of
+    row b, so the pipeline fetches pages in block-table order and the
+    kernel body never does address arithmetic on HBM;
+  * GQA folds the query-head group into the q rows (q arrives as
+    (B, KV, G, hd)), so pages are fetched once per KV head, never repeated;
+  * blocks entirely beyond the row's cursor are skipped via ``pl.when``
+    (their DMA still lands, but they cost no MXU/VPU work); the partial
+    tail block is masked in-kernel against the cursor.
+
+Free rows point at the pool's trash page — its contents are finite garbage,
+so a skipped/masked read never poisons live rows (per-row math only).
+
+For real TPU efficiency ``block_size`` should be a multiple of the lane
+width (128); the CPU test path runs in interpret mode where any size works.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _body(table_ref, index_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+          l_ref, *, scale: float, softcap: float, bs: int, n_blocks: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    idx = index_ref[b]                    # row cursor: slots <= idx are valid
+    base = j * bs
+
+    @pl.when(base <= idx)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bs, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bs)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        slot = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(slot <= idx, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_tpu(q, k_pages, v_pages, block_table, index, *,
+                        logit_softcap: float = 0.0, interpret: bool = False):
+    """q: (B, 1, H, hd); k_pages/v_pages: (NP, bs, KV, hd);
+    block_table: (B, NB) int32; index: (B,) int32 (valid slots <= index).
+    Returns (B, 1, H, hd)."""
+    B, _, H, hd = q.shape
+    bs, KV = k_pages.shape[1], k_pages.shape[2]
+    G = H // KV
+    NB = block_table.shape[1]
+    grid = (B, KV, NB)
+    scale = 1.0 / (hd ** 0.5)
+
+    # Fold the GQA group into q's row dim: head h = kv * G + g.
+    qg = q.reshape(B, KV, G, hd)
+
+    kernel = functools.partial(_body, scale=scale, softcap=logit_softcap,
+                               bs=bs, n_blocks=NB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block_table, index
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, tbl, idx: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, tbl, idx: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, tbl, idx: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, tbl, idx: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, hd), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), index.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,62 @@
+"""Public paged-attention entry points used by the model zoo.
+
+TPU backend -> Pallas kernel reading pages in place through the block
+table; otherwise the exact gather-then-masked-attention jnp path, so CPU
+tests stay bit-exact against the contiguous decode math
+(``ref.masked_gqa_attention`` is shared with ``models.attention``).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention import ref
+from repro.kernels.paged_attention.kernel import paged_attention_tpu
+
+
+def use_pallas(force: str = "auto") -> bool:
+    return force == "pallas" or (force == "auto"
+                                 and jax.default_backend() == "tpu")
+
+
+def paged_attention_decode(q, k_pages, v_pages, k_new, v_new, page, off,
+                           block_table, index, *, logit_softcap: float = 0.0,
+                           force: str = "auto", shard_fn=None):
+    """Fused write + attend for one decode step over the paged pool.
+
+    q: (B,1,H,hd); k_new/v_new: (B,KV,hd) — the new token's K/V; page/off:
+    (B,) physical write coordinates (trash-redirected for masked rows).
+
+    TPU: commit the write page-granularly and run the Pallas kernel over
+    the pool; returns ``(out, {k_pages, v_pages})`` with the updated pool.
+    Elsewhere: attention runs on the gathered context with the new K/V
+    selected in densely (``paged_attention_decode_deferred_ref``) and the
+    pool write is DEFERRED — returned as ``{k_pages, v_pages, pending}``
+    for the model to commit once per step across all scanned layers (one
+    scatter per pool leaf instead of one collective per layer).
+    """
+    if use_pallas(force):
+        k_pages = k_pages.at[page, off].set(k_new.astype(k_pages.dtype))
+        v_pages = v_pages.at[page, off].set(v_new.astype(v_pages.dtype))
+        out = paged_attention_tpu(
+            q, k_pages, v_pages, block_table, index,
+            logit_softcap=logit_softcap,
+            interpret=jax.default_backend() != "tpu")
+        return out, {"k_pages": k_pages, "v_pages": v_pages}
+    out = ref.paged_attention_decode_deferred_ref(
+        q, k_pages, v_pages, k_new, v_new, index, block_table,
+        logit_softcap=logit_softcap, shard_fn=shard_fn)
+    pending = {"k": k_new.astype(k_pages.dtype),
+               "v": v_new.astype(v_pages.dtype), "page": page, "off": off}
+    return out, {"k_pages": k_pages, "v_pages": v_pages, "pending": pending}
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_table, ctx_len, *,
+                            logit_softcap: float = 0.0):
+    """Chunked prefill: C queries at positions ctx_len..ctx_len+C-1 over the
+    row's pages (which already hold the chunk's own K/V).  Gather + exact
+    masked math on every backend — the chunk matmul is already MXU-shaped,
+    so a dedicated prefill kernel buys little; the decode step is the
+    page-granular hot path."""
+    return ref.paged_prefill_attention_ref(
+        q, k_pages, v_pages, block_table, ctx_len,
+        logit_softcap=logit_softcap)

@@ -24,6 +24,13 @@ compiled full-sequence forward, decode is one fused device step per token.
 prompt/generation lengths and Poisson arrivals (``--rate`` req/s) are
 admitted into ``--max-batch`` cache slots as rows free up; aggregate
 throughput and p50/p95 time-to-first-token are reported.
+
+``--paged`` (with ``--continuous``) serves through the block-paged KV
+cache: a shared pool of ``--num-blocks`` pages of ``--block-size`` tokens
+(default: full provisioning) addressed per row through block tables,
+prompts prefilled ``--chunk-len`` tokens per scheduler iteration straight
+into the pool, pages freed on EOS.  ``--no-overlap`` disables the
+scheduler's dispatch-then-fetch double buffering (debugging).
 """
 from __future__ import annotations
 
@@ -87,7 +94,20 @@ def main(argv=None):
                     help="Poisson arrival rate (req/s) for --continuous")
     ap.add_argument("--eos", type=int, default=-1,
                     help="stop token id for --continuous (-1: disabled)")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache + chunked prefill "
+                         "(with --continuous)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV page for --paged")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="page pool size (default: full provisioning)")
+    ap.add_argument("--chunk-len", type=int, default=None,
+                    help="max prefill chunk width per iteration for --paged")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable dispatch-then-fetch double buffering")
     args = ap.parse_args(argv)
+    if args.paged and not args.continuous:
+        raise SystemExit("--paged requires --continuous")
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -99,7 +119,9 @@ def main(argv=None):
         params = api.init(jax.random.PRNGKey(args.seed), cfg)
     rng = np.random.default_rng(args.seed)
     engine = ServeEngine(cfg, params, mesh=mesh,
-                         max_len=args.prompt_len + max(args.gen, 1) + 1)
+                         max_len=args.prompt_len + max(args.gen, 1) + 1,
+                         paged=args.paged, block_size=args.block_size,
+                         num_blocks=args.num_blocks)
 
     if args.continuous:
         lens = rng.integers(max(2, args.prompt_len // 4), args.prompt_len + 1,
@@ -113,16 +135,20 @@ def main(argv=None):
                 for p, g, a in zip(lens, gens, arrivals)]
         sched = ContinuousScheduler(engine, max_batch=args.max_batch,
                                     temperature=args.temperature,
-                                    eos_id=args.eos, seed=args.seed)
+                                    eos_id=args.eos, seed=args.seed,
+                                    chunk_len=args.chunk_len,
+                                    overlap=not args.no_overlap)
         sched.warmup(reqs)             # compile outside the timed run
         t0 = time.perf_counter()
         results = sched.run(reqs, on_finish=lambda r: print(
             f"  req {r.uid}: +{len(r.new_tokens)} tok ({r.finish_reason}) "
             f"ttft={r.ttft_s * 1e3:.1f}ms"))
         stats = summarize(results, time.perf_counter() - t0)
+        mode = "paged" if args.paged else "continuous"
         print(f"arch={cfg.name} layers={cfg.num_layers} mesh={args.mesh} "
-              f"continuous max_batch={args.max_batch} "
-              f"requests={args.requests}")
+              f"{mode} max_batch={args.max_batch} "
+              f"requests={args.requests} "
+              f"peak_concurrency={sched.peak_concurrency}")
         print(f"aggregate tokens/s={stats['tokens_per_s']:.1f}  "
               f"ttft p50={stats['ttft_p50_s'] * 1e3:.1f}ms "
               f"p95={stats['ttft_p95_s'] * 1e3:.1f}ms")

@@ -57,6 +57,22 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
             "v": jnp.zeros((batch, S, kvh, hd), dtype)}
 
 
+def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                        dtype=jnp.bfloat16):
+    """Per-layer paged KV pool: ``num_blocks`` pages of ``block_size`` tokens
+    plus one trailing *trash* page (id ``num_blocks``) that free rows' block
+    tables point at.  Rows address it through a ``(B, max_blocks)`` block
+    table (``repro.train.kv_pool``), so a slot costs one page of residency
+    instead of a whole ``max_len`` row."""
+    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+        raise NotImplementedError(
+            f"{cfg.name}: paged serving covers standard K/V attention; MLA "
+            "latent rows stay contiguous — serve with paged=False")
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k_pages": jnp.zeros((num_blocks + 1, block_size, kvh, hd), dtype),
+            "v_pages": jnp.zeros((num_blocks + 1, block_size, kvh, hd), dtype)}
+
+
 # ---------------------------------------------------------------------------
 # Helpers
 # ---------------------------------------------------------------------------
@@ -203,19 +219,129 @@ def attn_decode(p, cfg: ModelConfig, x: jax.Array, cache, cache_index: jax.Array
         v = v.astype(x.dtype)
 
     # Per-row validity mask over cache slots: (B, S).
+    from repro.kernels.paged_attention import ref as paged_ref
     slots = jnp.arange(S)[None, :]
     if window > 0:
         valid = slots <= jnp.minimum(cache_index, S - 1)[:, None]  # ring fill
     else:
         valid = slots <= cache_index[:, None]
 
-    # Grouped-query attention: fold groups into the head dim of q.
-    G = H // KVH
-    qg = q.reshape(B, 1, KVH, G, hd)
-    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / jnp.sqrt(hd).astype(x.dtype)
-    scores = softcap(scores, cfg.attn_logit_softcap)
-    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
-    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v).reshape(B, 1, cfg.q_dim)
-    out = out @ p["wo"]
+    # Grouped-query masked attention (shared with the paged decode path so
+    # paged-vs-contiguous parity holds by construction).
+    out = paged_ref.masked_gqa_attention(q, k, v, valid[:, None, :],
+                                         cfg.attn_logit_softcap)
+    out = out.reshape(B, 1, cfg.q_dim) @ p["wo"]
+    return out, new_cache
+
+
+def attn_decode_paged(p, cfg: ModelConfig, x: jax.Array, cache, block_table,
+                      cache_index: jax.Array, positions: jax.Array,
+                      write_mask=None) -> Tuple[jax.Array, dict]:
+    """Single-token decode against the paged pool (full attention layers).
+
+    x: (B, 1, D); cache: ``init_paged_kv_cache`` pytree (shared pool, NOT
+    per-row); block_table: (B, NB) int32; cache_index: (B,) cursor.  Each
+    row writes its new K/V at page ``table[b, idx // bs]`` offset
+    ``idx % bs``; rows with ``write_mask == False`` (inactive continuous-
+    batching slots) are redirected to the trash page, so a frozen slot's
+    pages are never perturbed — the paged analogue of the contiguous
+    masked-decode per-row cache select.  Attention reads through the table
+    (Pallas on TPU; elsewhere the exact gather path, with the pool commit
+    deferred into the returned cache's ``pending`` entry — the model
+    batches every layer's commit into ONE scatter per step, so the
+    replicated pool costs O(1) collectives per step, not O(layers))."""
+    from repro.kernels.paged_attention import ops as pa_ops
+    B = x.shape[0]
+    cache_index = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (B,))
+    bidx = jnp.arange(B)
+    q, k_new, v_new, _ = _project_qkv(p, cfg, x)
+    q, k_new = _qk_norm(p, cfg, q, k_new)
+    q, k_new = _position_encode(cfg, q, k_new, positions)
+
+    bs = cache["k_pages"].shape[1]
+    trash = cache["k_pages"].shape[0] - 1
+    page = block_table[bidx, cache_index // bs]
+    if write_mask is not None:
+        page = jnp.where(write_mask, page, trash)
+    off = cache_index % bs
+    out, new_cache = pa_ops.paged_attention_decode(
+        q, cache["k_pages"], cache["v_pages"], k_new[:, 0], v_new[:, 0],
+        page, off, block_table, cache_index,
+        logit_softcap=cfg.attn_logit_softcap,
+        shard_fn=lambda t: maybe_shard(
+            t, P(("pod", "data"), None, "model", None)))
+    out = out.reshape(B, 1, cfg.q_dim) @ p["wo"]
+    return out, new_cache
+
+
+def attn_prefill_chunk(p, cfg: ModelConfig, x: jax.Array, cache, ctx_len,
+                       positions: jax.Array, window: int,
+                       block_table=None) -> Tuple[jax.Array, dict]:
+    """One prefill chunk: x (B, C, D) at absolute positions
+    ``ctx_len .. ctx_len + C - 1`` (``ctx_len`` is a traced scalar — one
+    executable serves every chunk offset).
+
+    Full-attention layers (``window == 0``) write the chunk's K/V into the
+    paged pool through ``block_table`` and attend through the table
+    (context + in-chunk causal triangle in one ``slot <= q_pos`` rule).
+    Sliding-window layers keep their per-row ring cache: the ring is
+    unrolled next to the chunk keys with absolute positions, attention is
+    masked to ``0 <= q_pos - k_pos < window``, and the ring is advanced
+    exactly as a token-by-token decode would leave it (per slot, the last
+    chunk token that maps there wins — ``_fill_cache``'s rule)."""
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.kernels.paged_attention import ref as paged_ref
+    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+        raise NotImplementedError(
+            f"{cfg.name}: chunked prefill covers standard K/V attention")
+    B, C, _ = x.shape
+    ctx_len = jnp.asarray(ctx_len, jnp.int32)
+    q, k_new, v_new, _ = _project_qkv(p, cfg, x)
+    q, k_new = _qk_norm(p, cfg, q, k_new)
+    q, k_new = _position_encode(cfg, q, k_new, positions)
+
+    if window <= 0:                              # paged pool layer
+        bs = cache["k_pages"].shape[1]
+        pos = ctx_len + jnp.arange(C)            # (C,) absolute slots
+        page = block_table[:, pos // bs]         # (B, C) physical pages
+        off = jnp.broadcast_to((pos % bs)[None], (B, C))
+        k_pages = cache["k_pages"].at[page, off].set(
+            k_new.astype(cache["k_pages"].dtype))
+        v_pages = cache["v_pages"].at[page, off].set(
+            v_new.astype(cache["v_pages"].dtype))
+        new_cache = {"k_pages": k_pages, "v_pages": v_pages}
+        out = pa_ops.paged_prefill_attention(
+            q, k_pages.astype(x.dtype), v_pages.astype(x.dtype), block_table,
+            ctx_len, logit_softcap=cfg.attn_logit_softcap)
+    else:                                        # ring-buffer layer
+        W = cache["k"].shape[1]
+        # Unroll the ring into its logical order: entry j holds absolute
+        # position ctx_len - W + j at slot (ctx_len + j) % W.
+        slots = (ctx_len + jnp.arange(W)) % W
+        ctx_abs = ctx_len - W + jnp.arange(W)
+        k_ctx = cache["k"][:, slots].astype(x.dtype)
+        v_ctx = cache["v"][:, slots].astype(x.dtype)
+        keys = jnp.concatenate([k_ctx, k_new], axis=1)       # (B, W+C, ...)
+        vals = jnp.concatenate([v_ctx, v_new], axis=1)
+        k_abs = jnp.concatenate([ctx_abs, ctx_len + jnp.arange(C)])
+        q_pos = ctx_len + jnp.arange(C)
+        d = q_pos[:, None] - k_abs[None, :]                  # (C, W+C)
+        valid = (d >= 0) & (d < W) & (k_abs >= 0)[None, :]
+        valid = jnp.broadcast_to(valid[None], (B, C, W + C))
+        out = paged_ref.masked_gqa_attention(q, keys, vals, valid,
+                                             cfg.attn_logit_softcap)
+        # Advance the ring: slot s keeps the LAST chunk token with
+        # (ctx_len + i) % W == s (deterministic gather, as _fill_cache).
+        s = jnp.arange(W)
+        r = (s - ctx_len) % W
+        i_last = r + W * ((C - 1 - r) // W)
+        written = r < C
+        i_safe = jnp.where(written, i_last, 0)
+        sel = written[None, :, None, None]
+        new_cache = {
+            "k": jnp.where(sel, k_new[:, i_safe].astype(cache["k"].dtype),
+                           cache["k"]),
+            "v": jnp.where(sel, v_new[:, i_safe].astype(cache["v"].dtype),
+                           cache["v"])}
+    out = out.reshape(B, C, cfg.q_dim) @ p["wo"]
     return out, new_cache

@@ -31,6 +31,17 @@ class ModelApi:
     # (logits (B,S,V), cache ready for decode at per-row cursor = prompt
     # length).  None for archs without a prefill path yet (encoder-decoder).
     prefill: Optional[Callable] = None
+    # Paged serving (block-granular KV pool; see repro.train.kv_pool):
+    # init_paged_cache: (params, cfg, batch_size, num_blocks, block_size,
+    #   max_len, dtype) -> cache whose full-attention leaves are shared page
+    #   pools addressed through a (B, max_blocks) block table.
+    # init_prefill_carry: (params, cfg, max_len, dtype) -> B=1 chunked-
+    #   prefill carry (window rings + recurrent states).
+    # prefill_chunk: (params, cfg, tokens(B,C), cache, carry, block_table,
+    #   ctx_len) -> (last logits (B,1,V), cache, carry).
+    init_paged_cache: Optional[Callable] = None
+    init_prefill_carry: Optional[Callable] = None
+    prefill_chunk: Optional[Callable] = None
 
 
 def _lm_loss(params, cfg, batch, remat=False):
@@ -71,7 +82,10 @@ def get_model(cfg: ModelConfig) -> ModelApi:
     return ModelApi(init=transformer.lm_init, loss=_lm_loss, apply=_lm_apply,
                     init_cache=transformer.lm_init_cache,
                     decode_step=transformer.lm_decode_step,
-                    prefill=transformer.lm_prefill)
+                    prefill=transformer.lm_prefill,
+                    init_paged_cache=transformer.lm_init_paged_cache,
+                    init_prefill_carry=transformer.lm_init_prefill_carry,
+                    prefill_chunk=transformer.lm_prefill_chunk)
 
 
 # ---------------------------------------------------------------------------

@@ -228,6 +228,69 @@ def lm_init_cache(params, cfg: ModelConfig, batch_size: int, max_len: int,
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_super,) + x.shape).copy(), one)
 
 
+def lm_init_paged_cache(params, cfg: ModelConfig, batch_size: int,
+                        num_blocks: int, block_size: int, max_len: int,
+                        dtype=jnp.bfloat16):
+    """Paged serve-cache pytree (leading n_super axis, like `lm_init_cache`).
+
+    Full-attention layers hold a GLOBAL pool of ``num_blocks`` pages (+1
+    trash page) addressed per row through the engine's block table — their
+    leaves carry no batch dim.  Sliding-window layers keep per-row ring
+    buffers (already O(window) — paging them buys < one page per row) and
+    mamba/rwkv layers keep their O(1) per-row recurrent state; both are
+    scattered on admit exactly as in the contiguous engine."""
+    n_super = num_superblocks(params)
+    if n_super == 0:
+        return {}
+
+    def one_layer_cache(i):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            w = cfg.layer_window(i)
+            if w > 0:
+                return attn.init_kv_cache(cfg, batch_size, max_len, dtype,
+                                          window=w)
+            return attn.init_paged_kv_cache(cfg, num_blocks, block_size,
+                                            dtype)
+        if kind == "mamba":
+            return ssm_mod.mamba_init_state(cfg, batch_size)
+        if kind == "rwkv":
+            return ssm_mod.rwkv_init_state(cfg, batch_size)
+        raise ValueError(kind)
+
+    one = {f"layer{i}": one_layer_cache(i) for i in range(cfg.pattern_period)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_super,) + x.shape).copy(), one)
+
+
+def lm_init_prefill_carry(params, cfg: ModelConfig, max_len: int,
+                          dtype=jnp.bfloat16):
+    """B=1 chunked-prefill carry: the per-row state a prefilling request
+    threads between chunks — window rings and recurrent states.  Paged
+    layers carry nothing ({}): their K/V goes straight into the shared pool
+    through the block table, so admission never copies it."""
+    n_super = num_superblocks(params)
+    if n_super == 0:
+        return {}
+
+    def one_layer_carry(i):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            w = cfg.layer_window(i)
+            if w > 0:
+                return attn.init_kv_cache(cfg, 1, max_len, dtype, window=w)
+            return {}
+        if kind == "mamba":
+            return ssm_mod.mamba_init_state(cfg, 1)
+        if kind == "rwkv":
+            return ssm_mod.rwkv_init_state(cfg, 1)
+        raise ValueError(kind)
+
+    one = {f"layer{i}": one_layer_carry(i) for i in range(cfg.pattern_period)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_super,) + x.shape).copy(), one)
+
+
 def _prefill_layer(lp, cache_l, cfg: ModelConfig, i: int, x, positions):
     """One layer over the full prompt, filling its decode cache.
 
@@ -298,12 +361,106 @@ def lm_prefill(params, cfg: ModelConfig, tokens, cache, embeds=None,
     return logits, cache
 
 
-def _decode_layer(lp, cache_l, cfg: ModelConfig, i: int, x, index, positions):
+def _prefill_chunk_layer(lp, cache_l, carry_l, cfg: ModelConfig, i: int, x,
+                         ctx_len, positions, block_table):
+    """One layer over ONE prefill chunk (B, C, D) at offset ``ctx_len``.
+
+    Paged attention layers read/write the shared pool (from ``cache_l``)
+    through the block table; window/mamba/rwkv layers thread the B=1 carry
+    (``carry_l``) exactly as the full prefill threads its cache — binary-
+    decomposed chunks are exact (never padded), so recurrent states see
+    only real tokens and chunked == one-shot prefill numerically."""
+    kind = cfg.layer_kind(i)
+    if kind == "attn":
+        w = cfg.layer_window(i)
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        if w > 0:
+            y, carry_l = attn.attn_prefill_chunk(lp["attn"], cfg, h, carry_l,
+                                                 ctx_len, positions, w)
+        else:
+            y, cache_l = attn.attn_prefill_chunk(lp["attn"], cfg, h, cache_l,
+                                                 ctx_len, positions, 0,
+                                                 block_table=block_table)
+        x = x + y
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        if cfg.layer_is_moe(i):
+            y, _ = mlp_mod.moe_apply(lp["moe"], cfg, h)
+        else:
+            y = mlp_mod.mlp_apply(lp["mlp"], cfg, h)
+        x = x + y
+    elif kind == "mamba":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        y, carry_l = ssm_mod.mamba_prefill(lp["mamba"], cfg, h, carry_l)
+        x = x + y
+        if cfg.layer_is_moe(i):
+            h = apply_norm(lp["ln2"], x, cfg.norm)
+            y, _ = mlp_mod.moe_apply(lp["moe"], cfg, h)
+            x = x + y
+    elif kind == "rwkv":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        y, carry_l = ssm_mod.rwkv_time_mix_prefill(lp["rwkv_tm"], cfg, h,
+                                                   carry_l)
+        x = x + y
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        y, carry_l = ssm_mod.rwkv_channel_mix_prefill(lp["rwkv_tm"], cfg, h,
+                                                      carry_l)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    x = maybe_shard(x, P(("pod", "data"), "model", None))
+    return x, cache_l, carry_l
+
+
+def lm_prefill_chunk(params, cfg: ModelConfig, tokens, cache, carry,
+                     block_table, ctx_len):
+    """One chunked-prefill step: tokens (B, C) at absolute positions
+    ``ctx_len .. ctx_len + C - 1`` (``ctx_len`` traced — one executable per
+    chunk WIDTH, not per offset).  Paged K/V lands in the shared pool of
+    ``cache`` through ``block_table`` (B, NB); window rings and recurrent
+    states thread through the B=1 ``carry``.  Returns (last-position logits
+    (B, 1, V), cache, carry): only the final chunk's logits are consumed
+    (first-token sampling), so the lm_head matmul stays O(1) per chunk."""
+    B, C = tokens.shape
+    ctx_len = jnp.asarray(ctx_len, jnp.int32)
+    x = embed_tokens(params, cfg, tokens, offset=ctx_len)
+    pos = ctx_len + jnp.arange(C)[None, :]
+    positions = (jnp.broadcast_to(pos[None], (3, B, C))
+                 if cfg.position == "mrope"
+                 else jnp.broadcast_to(pos, (B, C)))
+    x = maybe_shard(x, P(("pod", "data"), None, None))
+    n_super = num_superblocks(params)
+    if n_super > 0:
+        def scan_fn(x, sbc):
+            sb, cache_sb, carry_sb = sbc
+            for i in range(cfg.pattern_period):
+                x, new_cache, new_carry = _prefill_chunk_layer(
+                    sb[f"layer{i}"], cache_sb[f"layer{i}"],
+                    carry_sb[f"layer{i}"], cfg, i, x, ctx_len, positions,
+                    block_table)
+                cache_sb[f"layer{i}"] = new_cache
+                carry_sb[f"layer{i}"] = new_carry
+            return x, (cache_sb, carry_sb)
+        x, (cache, carry) = jax.lax.scan(
+            scan_fn, x, (params["blocks"], cache, carry))
+    x = apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap(x @ head, cfg.final_logit_softcap)
+    return logits, cache, carry
+
+
+def _decode_layer(lp, cache_l, cfg: ModelConfig, i: int, x, index, positions,
+                  block_table=None, write_mask=None):
     kind = cfg.layer_kind(i)
     if kind == "attn":
         h = apply_norm(lp["ln1"], x, cfg.norm)
-        y, cache_l = attn.attn_decode(lp["attn"], cfg, h, cache_l, index,
-                                      positions, window=cfg.layer_window(i))
+        if "k_pages" in cache_l:
+            y, cache_l = attn.attn_decode_paged(lp["attn"], cfg, h, cache_l,
+                                                block_table, index, positions,
+                                                write_mask=write_mask)
+        else:
+            y, cache_l = attn.attn_decode(lp["attn"], cfg, h, cache_l, index,
+                                          positions,
+                                          window=cfg.layer_window(i))
         x = x + y
         h = apply_norm(lp["ln2"], x, cfg.norm)
         if cfg.layer_is_moe(i):
@@ -329,14 +486,42 @@ def _decode_layer(lp, cache_l, cfg: ModelConfig, i: int, x, index, positions):
     return x, cache_l
 
 
+def _commit_paged_writes(cache):
+    """Apply the decode step's deferred pool writes, batched across the
+    whole layer scan: each paged layer's attention deferred its one-token
+    K/V commit (``pending``: values + physical page/offset, stacked over
+    the n_super scan axis by the scan's ys), so the replicated pool sees
+    ONE scatter per leaf per step instead of one collective inside every
+    scan iteration — the difference between O(1) and O(layers) collective
+    launches per generated token on a data-parallel mesh."""
+    out = {}
+    for lname, lc in cache.items():
+        if isinstance(lc, dict) and "pending" in lc:
+            pend = lc["pending"]
+            sup = jnp.arange(lc["k_pages"].shape[0])[:, None]   # (n_super, 1)
+            out[lname] = {
+                "k_pages": lc["k_pages"].at[sup, pend["page"],
+                                            pend["off"]].set(pend["k"]),
+                "v_pages": lc["v_pages"].at[sup, pend["page"],
+                                            pend["off"]].set(pend["v"])}
+        else:
+            out[lname] = lc
+    return out
+
+
 def lm_decode_step(params, cfg: ModelConfig, tokens, cache, index,
-                   positions=None):
+                   positions=None, block_table=None, write_mask=None):
     """tokens: (B, 1) -> (logits (B, 1, V), new_cache).  `index` (B,) int32 is
     the number of tokens already in each row's cache (the absolute position
     of that row's new token); a scalar broadcasts for uniform batches.  Rows
     are fully independent — every row embeds, attends, and writes its cache
     at its own cursor — which is what lets a continuous-batching scheduler
-    decode requests at unrelated positions in one compiled step."""
+    decode requests at unrelated positions in one compiled step.
+
+    With a paged cache (``lm_init_paged_cache``) the full-attention layers
+    read/write the shared pool through ``block_table`` (B, NB); rows with
+    ``write_mask == False`` have their pool writes redirected to the trash
+    page (the contiguous freeze-select equivalent)."""
     B = tokens.shape[0]
     index = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (B,))
     x = embed_tokens(params, cfg, tokens, offset=0)
@@ -352,10 +537,13 @@ def lm_decode_step(params, cfg: ModelConfig, tokens, cache, index,
             sb, cache_sb = sb_and_cache
             for i in range(cfg.pattern_period):
                 x, new_c = _decode_layer(sb[f"layer{i}"], cache_sb[f"layer{i}"],
-                                         cfg, i, x, index, positions)
+                                         cfg, i, x, index, positions,
+                                         block_table=block_table,
+                                         write_mask=write_mask)
                 cache_sb[f"layer{i}"] = new_c
             return x, cache_sb
         x, cache = jax.lax.scan(scan_fn, x, (params["blocks"], cache))
+        cache = _commit_paged_writes(cache)
     x = apply_norm(params["final_norm"], x, cfg.norm)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = softcap(x @ head, cfg.final_logit_softcap)

@@ -1,0 +1,158 @@
+"""Block-granular KV cache allocator for paged serving.
+
+The paged serve cache is one global pool of ``num_blocks`` fixed-size token
+pages per attention layer (plus one reserved *trash* page), addressed
+through a per-row ``(batch, max_blocks)`` block table.  This module is the
+host-side brain: a free-list allocator with
+
+  * **commitment-based admission** — a request is admitted only if its
+    worst-case page count (``ceil((prompt + max_new) / block_size)``) fits
+    in the outstanding commitment budget.  Committed-but-unallocated pages
+    are not yet backed by physical blocks, but the invariant
+    ``allocated < committed <= num_blocks`` guarantees every future
+    ``advance`` finds a free block: admitted requests never starve
+    mid-flight, so the scheduler needs no preemption machinery;
+  * **alloc-on-advance** — physical pages are taken from the free list
+    lazily, as the prompt is (chunk-)prefilled and as the decode cursor
+    crosses page boundaries.  A request that stops early (EOS) before its
+    budget only ever touched the pages it actually used;
+  * **free-on-EOS** — a finished row returns its pages (and its remaining
+    commitment) immediately, instead of holding a ``max_len`` cache row
+    until the whole batch drains.
+
+The trash page (id ``num_blocks``, the pool's last page) is where free
+rows' block-table entries point and where masked decode writes of inactive
+rows are redirected — it is never read unmasked.
+
+Capacity math (documented in ROADMAP "Serving scenarios"): a contiguous
+engine fits ``HBM_tokens / max_len`` rows regardless of how short requests
+actually are; the pool fits ``num_blocks * block_size`` tokens of *actual*
+usage, so concurrency improves by roughly ``max_len / avg(prompt + gen)``
+minus the per-request tail fragmentation (< 1 page, i.e. < block_size
+tokens, per request).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation violates the admission contract."""
+
+
+class KVBlockPool:
+    """Free-list page allocator + per-row block tables (host side).
+
+    Pages are identified by ``0..num_blocks-1``; id ``num_blocks`` is the
+    reserved trash page (so device pools allocate ``num_blocks + 1`` pages).
+    ``table`` is the ``(batch, max_blocks)`` int32 block-table mirror the
+    engine uploads to the device whenever ``version`` changes.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, batch: int,
+                 max_blocks: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError(f"bad pool shape ({num_blocks}, {block_size})")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.batch = batch
+        self.max_blocks = max_blocks
+        self.trash = num_blocks                      # reserved page id
+        self._free: List[int] = list(range(num_blocks))[::-1]  # pop() -> 0
+        self._rows: Dict[int, List[int]] = {}        # row -> allocated pages
+        self._commit: Dict[int, int] = {}            # row -> worst-case pages
+        self.table = np.full((batch, max_blocks), self.trash, np.int32)
+        self.version = 0                             # bumped on table change
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def committed_blocks(self) -> int:
+        return sum(self._commit.values())
+
+    def blocks_needed(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Worst-case pages for one request: slots 0..prompt+max_new-2 hold
+        K/V (the last sampled token is never cached), rounded up a token."""
+        return -(-(prompt_len + max_new_tokens) // self.block_size)
+
+    def can_admit(self, n_blocks: int) -> bool:
+        return self.committed_blocks + n_blocks <= self.num_blocks
+
+    # -- request lifecycle --------------------------------------------------
+
+    def admit(self, row: int, prompt_len: int, max_new_tokens: int) -> None:
+        """Commit row's worst case (no physical pages yet; they arrive via
+        :meth:`advance` as prefill chunks / decode steps need them)."""
+        if row in self._commit:
+            raise ValueError(f"row {row} already admitted")
+        need = self.blocks_needed(prompt_len, max_new_tokens)
+        if not self.can_admit(need):
+            raise PoolExhausted(
+                f"admit(row={row}): need {need} pages, "
+                f"committed {self.committed_blocks}/{self.num_blocks}")
+        if need > self.max_blocks:
+            raise ValueError(f"request needs {need} pages > max_blocks "
+                             f"{self.max_blocks}")
+        self._commit[row] = need
+        self._rows[row] = []
+
+    def advance(self, row: int, num_tokens: int) -> bool:
+        """Ensure row's first ``num_tokens`` slots are page-backed; allocate
+        missing pages from the free list.  Returns True iff the block table
+        changed.  Guaranteed to succeed for admitted rows within budget."""
+        if row not in self._commit:
+            raise ValueError(f"row {row} not admitted")
+        need = -(-num_tokens // self.block_size)
+        if need > self._commit[row]:
+            raise PoolExhausted(
+                f"advance(row={row}): {need} pages exceeds the admission "
+                f"commitment {self._commit[row]}")
+        pages = self._rows[row]
+        changed = False
+        while len(pages) < need:
+            # allocated < committed <= num_blocks  =>  the free list is
+            # non-empty whenever an admitted row is still under commitment.
+            page = self._free.pop()
+            self.table[row, len(pages)] = page
+            pages.append(page)
+            changed = True
+        if changed:
+            self.version += 1
+        return changed
+
+    def free(self, row: int) -> None:
+        """Free-on-EOS: return row's pages + remaining commitment."""
+        pages = self._rows.pop(row)
+        del self._commit[row]
+        self._free.extend(reversed(pages))
+        self.table[row, :] = self.trash
+        self.version += 1
+
+    # -- invariants (exercised by the hypothesis fuzz test) -----------------
+
+    def check_invariants(self) -> None:
+        alloc = [p for pages in self._rows.values() for p in pages]
+        assert len(alloc) == len(set(alloc)), "page double-booked"
+        assert len(alloc) + len(self._free) == self.num_blocks, \
+            "pages leaked or duplicated"
+        assert self.trash not in alloc and self.trash not in self._free
+        assert self.committed_blocks <= self.num_blocks, "over-committed"
+        for row, pages in self._rows.items():
+            assert len(pages) <= self._commit[row], "row exceeds commitment"
+            live = self.table[row, :len(pages)]
+            assert (live == np.asarray(pages, np.int32)).all(), \
+                "table/alloc mismatch"
+            assert (self.table[row, len(pages):] == self.trash).all()
+        for row in range(self.batch):
+            if row not in self._rows:
+                assert (self.table[row] == self.trash).all()

@@ -26,12 +26,24 @@ discipline.  The contract:
     continuous-batching primitives (``continuous_state`` /
     ``prefill_request`` / ``admit_request`` / ``decode_masked``) that
     ``repro.train.serve_scheduler.ContinuousScheduler`` drives: single-
-    request B=1 prefill at the exact prompt length, compiled scatter of the
-    prefilled row into a freed slot, and a masked decode step whose
-    inactive rows are exact no-ops.
+    request B=1 prefill at the exact prompt length (executables LRU-
+    bounded per length), compiled scatter of the prefilled row into a
+    freed slot, and a masked decode step whose inactive rows are exact
+    no-ops.
+  * ``paged=True`` replaces the contiguous per-slot KV rows with a
+    block-paged pool (``models.attention.init_paged_kv_cache`` +
+    ``train.kv_pool.KVBlockPool``): full-attention K/V lives in shared
+    fixed-size pages addressed through a per-row block table, prompts are
+    prefilled in power-of-two CHUNKS straight into the pool
+    (``begin_prefill`` / ``prefill_chunk`` / ``admit_paged``), decode
+    attends through the table (``kernels.paged_attention``: Pallas on
+    TPU, exact gather elsewhere), and a finished row's pages return to
+    the pool immediately (``free_slot``).  Greedy tokens stay
+    byte-identical to contiguous solo generation.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import functools
@@ -60,6 +72,12 @@ class ContinuousState:
     cursor (prompt_len + max_new - 1).  Everything stays on device between
     iterations; the scheduler fetches (tokens, active) once per step to
     stream results and detect termination.
+
+    Paged engines additionally carry the host-side page allocator
+    (``pool``, a ``repro.train.kv_pool.KVBlockPool``) and the device copy
+    of its block table; ``table_version`` tracks which pool version the
+    device copy reflects, so the per-token decode loop re-uploads the
+    (tiny) table only when an admit/advance/free actually changed it.
     """
     tokens: object            # (B, 1) int32
     cache: object             # decode cache pytree
@@ -67,10 +85,57 @@ class ContinuousState:
     active: object            # (B,) bool
     limit: object             # (B,) int32
     key: object               # PRNG key (threaded through sampling)
+    pool: object = None       # KVBlockPool (host) — paged engines only
+    block_table: object = None  # (B, max_blocks) int32 device copy
+    table_version: int = -1   # pool.version the device table reflects
 
     @property
     def batch(self) -> int:
         return self.tokens.shape[0]
+
+
+@dataclasses.dataclass
+class PrefillJob:
+    """One request's in-flight chunked prefill (paged engines).
+
+    The prompt is processed as its binary decomposition into power-of-two
+    chunks (largest first, optionally capped at the scheduler's
+    ``chunk_len``): chunk widths are the only compile-time shapes, so the
+    executable count is O(log max_len) instead of one per prompt length.
+    K/V lands directly in the shared pool through row's block table;
+    ``carry`` threads the B=1 window-ring/recurrent state between chunks.
+    """
+    row: int
+    prompt: np.ndarray               # (P,) int32
+    max_new_tokens: int
+    chunks: list                     # chunk widths, consumed front to back
+    carry: object                    # device B=1 prefill carry
+    ctx: int = 0                     # tokens prefilled so far
+
+    @property
+    def done(self) -> bool:
+        return not self.chunks
+
+
+def pow2_chunks(n: int, cap: Optional[int] = None) -> list:
+    """Binary decomposition of ``n`` into descending powers of two, each at
+    most ``cap`` (rounded down to a power of two).  len(out) is O(log n +
+    n / cap): the compile-count bound AND the prompt-length bucketing."""
+    if n < 1:
+        raise ValueError(f"pow2_chunks({n})")
+    cap2 = None
+    if cap is not None:
+        if cap < 1:
+            raise ValueError(f"pow2_chunks cap {cap} < 1")
+        cap2 = 1 << (cap.bit_length() - 1)
+    out = []
+    while n:
+        c = 1 << (n.bit_length() - 1)
+        if cap2 is not None:
+            c = min(c, cap2)
+        out.append(c)
+        n -= c
+    return out
 
 
 @dataclasses.dataclass
@@ -91,7 +156,10 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, mesh=None, max_len: int = 512,
                  cache_dtype=jnp.float32, fsdp: bool = False,
-                 layout: str = "tp", moe_fsdp: str = "auto"):
+                 layout: str = "tp", moe_fsdp: str = "auto",
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 prefill_cache_size: int = 8):
         # Same RNG-layout guard as the train engine: sampled bits must not
         # depend on the mesh the categorical runs under.
         if "JAX_THREEFRY_PARTITIONABLE" not in os.environ:
@@ -102,10 +170,18 @@ class ServeEngine:
             raise NotImplementedError(
                 f"{cfg.name}: arch has no prefill path; ServeEngine supports "
                 "decoder-only archs (transformer / ssm / rwkv6)")
+        if paged and cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+            raise NotImplementedError(
+                f"{cfg.name}: paged serving covers standard K/V attention; "
+                "MLA latent rows stay contiguous — serve with paged=False")
         self.mesh = mesh if mesh is not None else mesh_lib.single_device_mesh()
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.layout = layout
+        self.paged = paged
+        self.block_size = block_size
+        self.num_blocks = num_blocks          # None: full (no overcommit)
+        self.prefill_cache_size = prefill_cache_size
         p_struct = jax.eval_shape(lambda t: t, params)
         self.param_shardings = shd.params_shardings(
             p_struct, self.mesh, fsdp=fsdp, moe_fsdp=moe_fsdp, layout=layout)
@@ -113,6 +189,9 @@ class ServeEngine:
         self._replicated = shd.replicated(self.mesh)
         self._built = {}              # (B, sample?) -> compiled steps
         self._cont_built = {}         # (B, sample?) -> continuous steps
+        self._paged_built = {}        # (B, sample?, NB) -> paged steps
+        self._chunk_built = {}        # (C, final?, sample?, NB, B) -> step
+        self._prefill_lru = collections.OrderedDict()  # (P, sample?) -> step
         self._dev_scalars = {}        # (dtype, value) -> replicated device put
 
     def _dev_scalar(self, value, dtype):
@@ -244,20 +323,18 @@ class ServeEngine:
     # -- continuous batching (per-row cursors + slot admission) -------------
 
     def _cont_steps(self, batch: int, temperature: float):
-        """Compiled (prefill1, decode_masked, admit, sh, sh1, init_cache,
+        """Compiled (decode_masked, admit, sh, sh1, init_cache,
         init_row_cache) for continuous batching at one batch size.
 
-        ``prefill1`` is the B=1 single-request prefill (jit re-specializes
-        per prompt length under the hood); ``decode_masked`` is the batch
-        decode step with per-row active/limit termination; ``admit``
-        scatters a prefilled row into a freed slot."""
+        ``decode_masked`` is the batch decode step with per-row
+        active/limit termination; ``admit`` scatters a prefilled row into a
+        freed slot.  The B=1 single-request prefill lives in a separate
+        per-length LRU (:meth:`_prefill1`)."""
         key = (batch, temperature > 0)
         if key not in self._cont_built:
             sample = temperature > 0
             sh = self._shardings(batch)
             sh1 = self._shardings(1)
-            prefill1 = steps_lib.make_prefill_step(
-                self.cfg, sample=sample, shardings=sh1)
             decode = steps_lib.make_serve_decode_step(
                 self.cfg, sample=sample, shardings=sh, masked=True)
             admit = steps_lib.make_admit_step(
@@ -272,41 +349,143 @@ class ServeEngine:
                                   batch_size=1, max_len=self.max_len,
                                   dtype=self.cache_dtype),
                 out_shardings=sh1.cache)
-            self._cont_built[key] = (prefill1, decode, admit, sh, sh1,
+            self._cont_built[key] = (decode, admit, sh, sh1,
                                      init_cache, init_row_cache)
         return self._cont_built[key]
 
+    def _prefill1(self, length: int, temperature: float):
+        """B=1 prefill executable for one exact prompt length, LRU-bounded.
+
+        jit's own executable cache grows one entry per distinct traced
+        shape; under ragged open-world prompt lengths that is unbounded.
+        Here every length gets its OWN jitted step in an OrderedDict capped
+        at ``prefill_cache_size`` — evicting a length drops its executable
+        with it.  (Paged engines sidestep the problem entirely: chunked
+        prefill buckets prompts into power-of-two chunk widths.)"""
+        key = (length, temperature > 0)
+        if key in self._prefill_lru:
+            self._prefill_lru.move_to_end(key)
+            return self._prefill_lru[key]
+        fn = steps_lib.make_prefill_step(
+            self.cfg, sample=temperature > 0, shardings=self._shardings(1))
+        self._prefill_lru[key] = fn
+        while len(self._prefill_lru) > self.prefill_cache_size:
+            self._prefill_lru.popitem(last=False)
+        return fn
+
+    # -- paged continuous batching ------------------------------------------
+
+    def _resolved_num_blocks(self, batch: int) -> int:
+        """Default pool size: full provisioning (batch * max_blocks pages —
+        no overcommit, byte-parity with the contiguous engine).  Smaller
+        engine-level ``num_blocks`` turns on block-granular admission."""
+        if self.num_blocks is not None:
+            return self.num_blocks
+        return batch * self.max_blocks
+
+    @property
+    def max_blocks(self) -> int:
+        return -(-self.max_len // self.block_size)
+
+    def _paged_steps(self, batch: int, temperature: float, num_blocks: int):
+        """Compiled (decode, admit, sh, carry_sh, init_cache, init_carry)
+        for paged continuous batching at one (batch, pool) size."""
+        key = (batch, temperature > 0, num_blocks)
+        if key not in self._paged_built:
+            sample = temperature > 0
+            init_cache_fn = functools.partial(
+                self.api.init_paged_cache, cfg=self.cfg, batch_size=batch,
+                num_blocks=num_blocks, block_size=self.block_size,
+                max_len=self.max_len, dtype=self.cache_dtype)
+            init_carry_fn = functools.partial(
+                self.api.init_prefill_carry, cfg=self.cfg,
+                max_len=self.max_len, dtype=self.cache_dtype)
+            cache_struct = jax.eval_shape(init_cache_fn, self.params)
+            carry_struct = jax.eval_shape(init_carry_fn, self.params)
+            tok_struct = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+            logit_struct = jax.ShapeDtypeStruct(
+                (batch, 1, self.cfg.vocab_size), jnp.float32)
+            sh = steps_lib.ServeShardings(
+                mesh=self.mesh,
+                params=self.param_shardings,
+                cache=shd.cache_shardings(cache_struct, self.mesh),
+                tokens=shd.batch_shardings(tok_struct, self.mesh,
+                                           layout=self.layout),
+                logits=shd.batch_shardings(logit_struct, self.mesh,
+                                           layout=self.layout),
+                replicated=self._replicated)
+            carry_sh = shd.cache_shardings(carry_struct, self.mesh)
+            decode = steps_lib.make_serve_decode_step(
+                self.cfg, sample=sample, shardings=sh, masked=True,
+                paged=True)
+            admit = steps_lib.make_paged_admit_step(
+                shardings=sh, carry_shardings=carry_sh)
+            init_cache = jax.jit(init_cache_fn, out_shardings=sh.cache)
+            init_carry = jax.jit(init_carry_fn, out_shardings=carry_sh)
+            self._paged_built[key] = (decode, admit, sh, carry_sh,
+                                      init_cache, init_carry)
+        return self._paged_built[key]
+
+    def _chunk_step(self, width: int, final: bool, temperature: float,
+                    batch: int, num_blocks: int):
+        """Chunked-prefill executable for one chunk WIDTH (power of two)."""
+        key = (width, final, temperature > 0, batch, num_blocks)
+        if key not in self._chunk_built:
+            _, _, sh, carry_sh, _, _ = self._paged_steps(
+                batch, temperature, num_blocks)
+            self._chunk_built[key] = steps_lib.make_prefill_chunk_step(
+                self.cfg, final=final, sample=temperature > 0,
+                shardings=sh, carry_shardings=carry_sh)
+        return self._chunk_built[key]
+
     def continuous_state(self, batch: int, temperature: float = 0.0,
-                         seed: int = 0) -> ContinuousState:
+                         seed: int = 0,
+                         num_blocks: Optional[int] = None) -> ContinuousState:
         """Fresh all-slots-free decode state (compiles the continuous
-        steps for this batch size)."""
-        _, _, _, sh, _, init_cache, _ = self._cont_steps(batch, temperature)
+        steps for this batch size).  Paged engines also create the host
+        page allocator (``num_blocks`` overrides the engine default) and
+        place the pool + device block table."""
+        r = self._replicated
+        if self.paged:
+            from repro.train.kv_pool import KVBlockPool
+            nb = num_blocks if num_blocks is not None \
+                else self._resolved_num_blocks(batch)
+            _, _, sh, _, init_cache, _ = self._paged_steps(
+                batch, temperature, nb)
+            pool = KVBlockPool(nb, self.block_size, batch, self.max_blocks)
+        else:
+            _, _, sh, _, init_cache, _ = self._cont_steps(batch, temperature)
+            pool = None
         with self.activation_context():
             cache = init_cache(self.params)
-            r = self._replicated
-            return ContinuousState(
+            state = ContinuousState(
                 tokens=jax.device_put(np.zeros((batch, 1), np.int32),
                                       sh.tokens),
                 cache=cache,
                 index=jax.device_put(np.zeros((batch,), np.int32), r),
                 active=jax.device_put(np.zeros((batch,), bool), r),
                 limit=jax.device_put(np.zeros((batch,), np.int32), r),
-                key=jax.device_put(jax.random.PRNGKey(seed), r))
+                key=jax.device_put(jax.random.PRNGKey(seed), r),
+                pool=pool)
+        return self._sync_table(state)
 
     def prefill_request(self, state: ContinuousState, prompt,
                         temperature: float = 0.0):
-        """ONE request's compiled B=1 prefill at its exact prompt length.
+        """ONE request's compiled B=1 prefill at its exact prompt length
+        (contiguous engines; paged engines use :meth:`begin_prefill` /
+        :meth:`prefill_chunk`).
 
         Returns ``(state, first_token (1,1) device, row_cache)`` — nothing
         touches live batch rows; the caller decides (on host) whether the
         request is already finished (eos / max_new == 1) or should be
-        admitted into a slot via :meth:`admit_request`."""
+        admitted into a slot via :meth:`admit_request`.  Per-length
+        executables are LRU-bounded at ``prefill_cache_size``."""
         prompt = np.asarray(prompt, np.int32).reshape(1, -1)
         if prompt.shape[1] >= self.max_len:
             raise ValueError(f"prompt {prompt.shape[1]} exceeds max_len "
                              f"{self.max_len}")
-        prefill1, _, _, _, sh1, _, init_row = self._cont_steps(
-            state.batch, temperature)
+        _, _, _, sh1, _, init_row = self._cont_steps(state.batch, temperature)
+        prefill1 = self._prefill1(prompt.shape[1], temperature)
         with self.activation_context():
             row_cache = init_row(self.params)
             toks = jax.device_put(prompt, sh1.tokens)
@@ -321,7 +500,7 @@ class ServeEngine:
                       temperature: float = 0.0) -> ContinuousState:
         """Scatter a prefilled request into batch slot ``row`` (compiled;
         donates the live state; other rows untouched)."""
-        _, _, admit, _, _, _, _ = self._cont_steps(state.batch, temperature)
+        _, admit, _, _, _, _ = self._cont_steps(state.batch, temperature)
         with self.activation_context():
             cache, tokens, index, active, limit = admit(
                 state.cache, state.tokens, state.index, state.active,
@@ -336,14 +515,119 @@ class ServeEngine:
         """One continuous-batching decode iteration over all slots.
 
         Active rows advance (sample, write cache at their own cursor) and
-        self-terminate on eos / per-row limit; inactive rows are no-ops."""
-        _, decode, _, _, _, _, _ = self._cont_steps(state.batch, temperature)
-        with self.activation_context():
-            temp = (self._dev_scalar(temperature, np.float32),
-                    ) if temperature > 0 else ()
-            tokens, _, cache, index, active, key = decode(
-                self.params, state.tokens, state.cache, state.index,
-                state.active, state.limit,
-                self._dev_scalar(eos_id, np.int32), *temp, state.key)
+        self-terminate on eos / per-row limit; inactive rows are no-ops.
+        Paged engines read/write K/V through the block table (re-uploaded
+        only when the pool changed it — never a steady-state H2D)."""
+        temp = (self._dev_scalar(temperature, np.float32),
+                ) if temperature > 0 else ()
+        eos = self._dev_scalar(eos_id, np.int32)
+        if self.paged:
+            state = self._sync_table(state)
+            decode, _, _, _, _, _ = self._paged_steps(
+                state.batch, temperature, state.pool.num_blocks)
+            with self.activation_context():
+                tokens, _, cache, index, active, key = decode(
+                    self.params, state.tokens, state.cache, state.index,
+                    state.active, state.limit, state.block_table, eos,
+                    *temp, state.key)
+        else:
+            decode, _, _, _, _, _ = self._cont_steps(state.batch, temperature)
+            with self.activation_context():
+                tokens, _, cache, index, active, key = decode(
+                    self.params, state.tokens, state.cache, state.index,
+                    state.active, state.limit, eos, *temp, state.key)
         return dataclasses.replace(state, tokens=tokens, cache=cache,
                                    index=index, active=active, key=key)
+
+    # -- paged request lifecycle (chunked prefill through the pool) ---------
+
+    def _sync_table(self, state: ContinuousState) -> ContinuousState:
+        """Re-upload the block table iff the host pool changed it."""
+        if state.pool is None or state.table_version == state.pool.version:
+            return state
+        tbl = jax.device_put(np.ascontiguousarray(state.pool.table),
+                             self._replicated)
+        return dataclasses.replace(state, block_table=tbl,
+                                   table_version=state.pool.version)
+
+    def begin_prefill(self, state: ContinuousState, row: int, prompt,
+                      max_new_tokens: int, chunk_len: Optional[int] = None,
+                      temperature: float = 0.0):
+        """Admit a request into the pool and start its chunked prefill.
+
+        Commits the request's worst-case pages (admission contract — see
+        ``kv_pool``), assigns slot ``row``, and returns ``(state, job)``;
+        drive the job with :meth:`prefill_chunk` once per scheduler
+        iteration, then :meth:`admit_paged`."""
+        prompt = np.asarray(prompt, np.int32).ravel()
+        if len(prompt) >= self.max_len:
+            raise ValueError(f"prompt {len(prompt)} exceeds max_len "
+                             f"{self.max_len}")
+        state.pool.admit(row, len(prompt), max_new_tokens)
+        _, _, _, _, _, init_carry = self._paged_steps(
+            state.batch, temperature, state.pool.num_blocks)
+        with self.activation_context():
+            carry = init_carry(self.params)
+        job = PrefillJob(row=row, prompt=prompt,
+                         max_new_tokens=max_new_tokens,
+                         chunks=pow2_chunks(len(prompt), chunk_len),
+                         carry=carry)
+        return state, job
+
+    def prefill_chunk(self, state: ContinuousState, job: PrefillJob,
+                      temperature: float = 0.0):
+        """Run the job's next prefill chunk (K/V into the pool through the
+        row's block table; window/recurrent state through the B=1 carry).
+
+        Returns ``(state, first_token or None)`` — the token (device,
+        (1,1)) appears when the final chunk samples it."""
+        C = job.chunks.pop(0)
+        final = not job.chunks
+        job_tokens = job.prompt[job.ctx:job.ctx + C][None, :]
+        state.pool.advance(job.row, job.ctx + C)       # alloc-on-advance
+        row_table = jax.device_put(
+            np.ascontiguousarray(state.pool.table[job.row:job.row + 1]),
+            self._replicated)
+        step = self._chunk_step(C, final, temperature, state.batch,
+                                state.pool.num_blocks)
+        with self.activation_context():
+            toks = jax.device_put(job_tokens, self._replicated)
+            ctx = np.int32(job.ctx)
+            if final:
+                temp = (self._dev_scalar(temperature, np.float32),
+                        ) if temperature > 0 else ()
+                tok, cache, carry, key = step(self.params, toks, state.cache,
+                                              job.carry, row_table, ctx,
+                                              *temp, state.key)
+                state = dataclasses.replace(state, cache=cache, key=key)
+            else:
+                cache, carry = step(self.params, toks, state.cache,
+                                    job.carry, row_table, ctx)
+                tok = None
+                state = dataclasses.replace(state, cache=cache)
+        job.carry = carry
+        job.ctx += C
+        return state, tok
+
+    def admit_paged(self, state: ContinuousState, job: PrefillJob,
+                    first_token, temperature: float = 0.0) -> ContinuousState:
+        """Activate a fully prefilled request in its slot: scatter the B=1
+        carry (window rings + recurrent rows — the pages are already in the
+        pool) and arm tokens/cursor/active/limit."""
+        _, admit, _, _, _, _ = self._paged_steps(
+            state.batch, temperature, state.pool.num_blocks)
+        P = len(job.prompt)
+        with self.activation_context():
+            cache, tokens, index, active, limit = admit(
+                state.cache, state.tokens, state.index, state.active,
+                state.limit, job.carry, first_token, np.int32(P),
+                np.int32(P + job.max_new_tokens - 1), np.int32(job.row))
+        return dataclasses.replace(state, cache=cache, tokens=tokens,
+                                   index=index, active=active, limit=limit)
+
+    def free_slot(self, state: ContinuousState, row: int) -> ContinuousState:
+        """Free-on-EOS: return the finished row's pages to the pool
+        immediately (its table row points at the trash page until the slot
+        is re-admitted; the device table refreshes at the next decode)."""
+        state.pool.free(row)
+        return state

@@ -6,18 +6,30 @@ The engine's batch-to-completion loop stalls every cache row on the longest
 request; the scheduler instead treats the decode batch as ``max_batch``
 *slots*:
 
-  * each arriving request is prefilled ALONE (one compiled B=1 forward at
-    its exact prompt length — no padding) and scattered into a freed slot
-    with a compiled admit step that leaves live rows untouched;
+  * each arriving request is prefilled ALONE and scattered into a freed
+    slot without perturbing live rows.  On a contiguous engine that is one
+    compiled B=1 forward at the exact prompt length; on a **paged** engine
+    the prompt is prefilled in power-of-two CHUNKS — ``chunk_len`` tokens
+    per scheduler iteration, written straight into the shared page pool
+    through the request's block table — so a long prompt no longer blocks
+    the decode loop for a full iteration, and admission is gated on the
+    block pool (``kv_pool``: commitment admission, alloc-on-advance,
+    free-on-EOS) instead of whole ``max_len`` rows;
   * every iteration runs ONE masked decode step across all slots — each row
     samples and writes its cache at its own cursor, self-terminating on EOS
     or its per-row token budget, while free slots are exact no-ops;
   * finished sequences are streamed out (``on_finish``) the iteration they
-    terminate, and their slot is re-admitted on the same iteration.
+    terminate, and their slot (and, paged, their pages) is reclaimed
+    immediately.
 
-Between iterations only the (B,) sampled tokens + active mask cross to the
-host — the fetch the scheduler needs anyway to stream results and detect
-termination; caches, cursors, and the PRNG key stay donated on device.
+Host/device overlap (``overlap=True``): the scheduler dispatches decode
+step k+1 BEFORE fetching step k's (B,) sampled tokens + active mask —
+dispatch-then-fetch double buffering — so host-side bookkeeping (streaming,
+termination, admission decisions) runs under the next device step instead
+of serializing with it.  Termination is therefore observed one iteration
+late; the extra iteration is an exact no-op for the terminated row (its
+active flag flipped on device), so every request's token stream is
+unchanged — only slot reclaim shifts by one iteration.
 
 Greedy decoding is deterministic per request: a request's token stream is
 byte-identical to running it alone through ``ServeEngine.generate``
@@ -72,13 +84,22 @@ class RequestResult:
 
 class ContinuousScheduler:
     """Request queue + slot allocator over a ``ServeEngine`` (see module
-    docstring)."""
+    docstring).
+
+    ``chunk_len`` caps the per-iteration prefill chunk width on paged
+    engines (None: the prompt's full binary decomposition runs one chunk
+    per iteration anyway — widths are always powers of two, which is what
+    bounds the compile count).  ``num_blocks`` overrides the engine's pool
+    size per run.  ``overlap=False`` restores strictly serial
+    fetch-then-dispatch (useful for debugging; the token streams are
+    identical either way)."""
 
     def __init__(self, engine: ServeEngine, max_batch: int = 4,
                  temperature: float = 0.0, eos_id: int = -1, seed: int = 0,
                  time_fn: Callable[[], float] = time.perf_counter,
                  sleep_fn: Callable[[float], None] = time.sleep,
-                 poll_s: float = 1e-3):
+                 poll_s: float = 1e-3, chunk_len: Optional[int] = None,
+                 overlap: bool = True, num_blocks: Optional[int] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch {max_batch} < 1")
         self.engine = engine
@@ -89,11 +110,16 @@ class ContinuousScheduler:
         self.time_fn = time_fn                 # virtual clocks: pair with a
         self.sleep_fn = sleep_fn               # matching sleep_fn
         self.poll_s = poll_s
+        self.chunk_len = chunk_len
+        self.overlap = overlap
+        self.num_blocks = num_blocks
+        self.peak_concurrency = 0              # max in-flight (live+prefill)
 
     def warmup(self, requests: Sequence[Request]):
         """Compile every executable a serving run will need — the masked
-        decode/admit steps and one B=1 prefill per distinct prompt length
-        (= per length bucket) — outside the timed/served path."""
+        decode/admit steps and the prefill executables (per exact length on
+        contiguous engines, per power-of-two chunk width on paged ones) —
+        outside the timed/served path."""
         seen = {len(np.asarray(r.prompt).ravel()): r.prompt
                 for r in requests}
         self.run([Request(prompt=p, max_new_tokens=2)
@@ -103,6 +129,7 @@ class ContinuousScheduler:
             on_finish: Optional[Callable[[RequestResult], None]] = None
             ) -> List[RequestResult]:
         """Serve all requests; returns results in submission order."""
+        engine, paged = self.engine, self.engine.paged
         reqs = []
         for i, r in enumerate(requests):
             uid = r.uid if r.uid is not None else i
@@ -113,17 +140,38 @@ class ContinuousScheduler:
         for r in reqs:
             if r.max_new_tokens < 1:
                 raise ValueError(f"request {r.uid}: max_new_tokens < 1")
-            if len(r.prompt) + r.max_new_tokens > self.engine.max_len:
+            if len(r.prompt) + r.max_new_tokens > engine.max_len:
                 raise ValueError(
                     f"request {r.uid}: prompt {len(r.prompt)} + gen "
-                    f"{r.max_new_tokens} exceeds max_len {self.engine.max_len}")
+                    f"{r.max_new_tokens} exceeds max_len {engine.max_len}")
+            if paged:
+                bs = engine.block_size
+                need = -(-(len(r.prompt) + r.max_new_tokens) // bs)
+                cap = self.num_blocks if self.num_blocks is not None \
+                    else engine._resolved_num_blocks(self.max_batch)
+                if need > min(cap, engine.max_blocks):
+                    raise ValueError(
+                        f"request {r.uid}: needs {need} pages, pool holds "
+                        f"{min(cap, engine.max_blocks)} per row")
 
+        self.peak_concurrency = 0          # per-run (warmup doesn't count)
         pending = deque(sorted(reqs, key=lambda r: r.arrival_s))
-        state = self.engine.continuous_state(
-            self.max_batch, temperature=self.temperature, seed=self.seed)
+        state = engine.continuous_state(
+            self.max_batch, temperature=self.temperature, seed=self.seed,
+            num_blocks=self.num_blocks) if paged else \
+            engine.continuous_state(self.max_batch,
+                                    temperature=self.temperature,
+                                    seed=self.seed)
         free = list(range(self.max_batch))[::-1]   # pop() -> row 0 first
-        live: dict = {}                            # row -> (req, [tokens])
+        live: dict = {}           # row -> (req, [tokens], t_first)
+        prefilling: dict = {}     # row -> (req, PrefillJob)   (paged only)
+        cursors: dict = {}        # row -> host mirror of the decode cursor
         done: dict = {}
+        # Dispatch-then-fetch double buffering: device arrays of steps whose
+        # host bookkeeping is still pending, with (row, uid) of every row
+        # live at dispatch — the uid guards against crediting a stale
+        # step's token to a request re-admitted into a just-freed slot.
+        fetch_q: deque = deque()  # (tokens_dev, active_dev, ((row, uid),..))
         t0 = self.time_fn()
 
         def finish(req, tokens, slot, t_first, now):
@@ -138,43 +186,117 @@ class ContinuousScheduler:
             if on_finish is not None:
                 on_finish(res)
 
-        while pending or live:
+        def drain(keep: int):
+            """Apply host bookkeeping for dispatched steps beyond `keep`."""
+            nonlocal state
+            while len(fetch_q) > keep:
+                toks_d, act_d, rows = fetch_q.popleft()
+                toks = np.asarray(toks_d)[:, 0]      # blocks on the device
+                act = np.asarray(act_d)
+                now = self.time_fn() - t0
+                for row, uid in rows:
+                    if row not in live or live[row][0].uid != uid:
+                        continue     # slot re-admitted since this dispatch
+                    req, out, t_first = live[row]
+                    out.append(int(toks[row]))
+                    if not act[row]:   # terminated: stream out, free slot
+                        finish(req, out, row, t_first, now)
+                        del live[row]
+                        cursors.pop(row, None)
+                        if paged:
+                            state = engine.free_slot(state, row)
+                        free.append(row)
+
+        while pending or live or prefilling or fetch_q:
             now = self.time_fn() - t0
             # ---- admit arrived requests into free slots -------------------
-            while free and pending and pending[0].arrival_s <= now:
-                req = pending.popleft()
-                state, tok, row_cache = self.engine.prefill_request(
-                    state, req.prompt, temperature=self.temperature)
+            # Paged admission is FIRST-FIT over the arrived prefix of the
+            # queue: a big request whose worst-case pages don't fit yet must
+            # not idle pages a later short request could use (head-of-line
+            # blocking).  The blocked request admits as soon as commitments
+            # drain to its need — under sustained overload a large request
+            # can wait long (no aging/reservation yet; noted in ROADMAP).
+            skip = 0
+            while free and pending and skip < len(pending) \
+                    and pending[skip].arrival_s <= now:
+                req = pending[skip]
+                if paged:
+                    need = state.pool.blocks_needed(len(req.prompt),
+                                                    req.max_new_tokens)
+                    if not state.pool.can_admit(need):
+                        skip += 1      # try later arrivals that fit
+                        continue
+                    del pending[skip]
+                    row = free.pop()
+                    state, job = engine.begin_prefill(
+                        state, row, req.prompt, req.max_new_tokens,
+                        chunk_len=self.chunk_len,
+                        temperature=self.temperature)
+                    prefilling[row] = (req, job)
+                else:
+                    pending.popleft()
+                    state, tok, row_cache = engine.prefill_request(
+                        state, req.prompt, temperature=self.temperature)
+                    first = int(np.asarray(tok)[0, 0])
+                    t_first = self.time_fn() - t0
+                    if req.max_new_tokens == 1 or \
+                            (self.eos_id >= 0 and first == self.eos_id):
+                        finish(req, [first], -1, t_first, t_first)
+                        continue
+                    row = free.pop()
+                    state = engine.admit_request(
+                        state, row, tok, row_cache, len(req.prompt),
+                        req.max_new_tokens, temperature=self.temperature)
+                    live[row] = (req, [first], t_first)
+                    cursors[row] = len(req.prompt)
+            # ---- chunked prefill: one chunk per prefilling row ------------
+            for row in list(prefilling):
+                req, job = prefilling[row]
+                state, tok = engine.prefill_chunk(
+                    state, job, temperature=self.temperature)
+                if tok is None:
+                    continue
                 first = int(np.asarray(tok)[0, 0])
                 t_first = self.time_fn() - t0
+                del prefilling[row]
                 if req.max_new_tokens == 1 or \
                         (self.eos_id >= 0 and first == self.eos_id):
-                    finish(req, [first], -1, t_first, t_first)
+                    finish(req, [first], row, t_first, t_first)
+                    state = engine.free_slot(state, row)
+                    free.append(row)
                     continue
-                row = free.pop()
-                state = self.engine.admit_request(
-                    state, row, tok, row_cache, len(req.prompt),
-                    req.max_new_tokens, temperature=self.temperature)
+                state = engine.admit_paged(state, job, tok,
+                                           temperature=self.temperature)
                 live[row] = (req, [first], t_first)
+                cursors[row] = len(req.prompt)
+            self.peak_concurrency = max(self.peak_concurrency,
+                                        len(live) + len(prefilling))
             if not live:
-                if pending:            # idle until the next arrival
+                drain(0)
+                if not (live or prefilling) and pending:
                     wait = pending[0].arrival_s - (self.time_fn() - t0)
-                    if wait > 0:
+                    if wait > 0:       # idle until the next arrival
                         self.sleep_fn(min(wait, self.poll_s))
                 continue
             # ---- one masked decode iteration across all slots -------------
-            state = self.engine.decode_masked(
+            if paged:
+                # alloc-on-advance: back the slot each live row writes next,
+                # plus one page of lookahead — admission is commitment-
+                # gated, so allocating a committed page early costs nothing,
+                # and the block table then re-uploads once per page of
+                # decoded tokens instead of at every boundary crossing.
+                bs = engine.block_size
+                for row in live:
+                    req = live[row][0]
+                    limit = len(req.prompt) + req.max_new_tokens - 1
+                    state.pool.advance(row, min(cursors[row] + 1 + bs, limit))
+            state = engine.decode_masked(
                 state, temperature=self.temperature, eos_id=self.eos_id)
-            toks = np.asarray(state.tokens)[:, 0]
-            act = np.asarray(state.active)
-            now = self.time_fn() - t0
-            for row in list(live):
-                req, out, t_first = live[row]
-                out.append(int(toks[row]))
-                if not act[row]:       # terminated: stream out, free slot
-                    finish(req, out, row, t_first, now)
-                    del live[row]
-                    free.append(row)
+            fetch_q.append((state.tokens, state.active,
+                            tuple((row, live[row][0].uid) for row in live)))
+            for row in live:           # host mirror (clamped in advance)
+                cursors[row] += 1
+            drain(1 if self.overlap else 0)
         return [done[r.uid if r.uid is not None else i]
                 for i, r in enumerate(requests)]
 

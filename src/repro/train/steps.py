@@ -236,10 +236,19 @@ def make_prefill_step(cfg: ModelConfig, sample: bool = False,
         donate_argnums=donate)
 
 
+def _is_paged_leaf(path) -> bool:
+    """Paged pool leaves (k_pages/v_pages) have no batch dim: per-row
+    freeze/scatter logic must skip them (their per-row no-op is the trash-
+    page write redirect inside ``attn_decode_paged``)."""
+    return any(str(getattr(p, "key", "")) in ("k_pages", "v_pages")
+               for p in path)
+
+
 def make_serve_decode_step(cfg: ModelConfig, sample: bool = False,
                            donate_cache: bool = True,
                            shardings: Optional[ServeShardings] = None,
-                           masked: bool = False) -> Callable:
+                           masked: bool = False,
+                           paged: bool = False) -> Callable:
     """Fused decode + sampling, one device round-trip per generated token.
 
     Batch-to-completion (``masked=False``):
@@ -262,11 +271,25 @@ def make_serve_decode_step(cfg: ModelConfig, sample: bool = False,
 
     The greedy executable takes no ``temp`` operand (dead for argmax);
     ``temp``/``eos`` are traced scalars, so all temperatures and stop
-    tokens share one executable per (batch, mode)."""
-    api = registry.get_model(cfg)
+    tokens share one executable per (batch, mode).
 
-    def core(params, tokens, cache, index, temp, key):
-        logits, cache = api.decode_step(params, cfg, tokens, cache, index)
+    With ``paged=True`` (requires ``masked=True``) the step additionally
+    takes the ``(B, max_blocks)`` block table after ``limit``: attention
+    layers read/write the shared page pool through it, inactive rows'
+    pool writes are redirected to the trash page (``write_mask=active``),
+    and the per-row freeze select skips the pool leaves (they have no
+    batch dim — the redirect IS their no-op)."""
+    api = registry.get_model(cfg)
+    if paged and not masked:
+        raise ValueError("paged decode is the continuous (masked) path")
+
+    def core(params, tokens, cache, index, temp, key, table=None,
+             write_mask=None):
+        kw = {}
+        if paged:
+            kw = dict(block_table=table, write_mask=write_mask)
+        logits, cache = api.decode_step(params, cfg, tokens, cache, index,
+                                        **kw)
         nxt, key = _sample(logits[:, -1], temp, key, sample)
         return nxt, logits, cache, key
 
@@ -278,26 +301,36 @@ def make_serve_decode_step(cfg: ModelConfig, sample: bool = False,
                     index + 1, key)
         n_state = 4          # tokens, cache, index, [temp], key follow params
     else:
-        def body(params, tokens, cache, index, active, limit, eos, temp, key):
+        def body(params, tokens, cache, index, active, limit, *args):
+            table, (eos, temp, key) = \
+                (args[0], args[1:]) if paged else (None, args)
             nxt, logits, new_cache, key = core(params, tokens, cache, index,
-                                               temp, key)
+                                               temp, key, table=table,
+                                               write_mask=active)
             nxt = jnp.where(active, nxt, 0).astype(jnp.int32)
             new_index = index + active.astype(index.dtype)
             new_active = active & (nxt != eos) & (new_index < limit)
 
-            def freeze(new, old):
+            def freeze(path, new, old):
+                if _is_paged_leaf(path):
+                    return new           # trash-page redirect is the no-op
                 keep = active.reshape((1, active.shape[0])
                                       + (1,) * (new.ndim - 2))
                 return jnp.where(keep, new, old)
-            cache = jax.tree.map(freeze, new_cache, cache)
+            cache = jax.tree_util.tree_map_with_path(freeze, new_cache, cache)
             return (nxt[:, None], logits, cache, new_index, new_active, key)
-        n_state = 7          # tokens, cache, index, active, limit, eos + key
+        n_state = 8 if paged else 7  # tokens, cache, index, active, limit,
+                                     # [table,] eos + key
 
     if sample:
         fn = body
     elif not masked:
         def fn(params, tokens, cache, index, key):
             return body(params, tokens, cache, index, None, key)
+    elif paged:
+        def fn(params, tokens, cache, index, active, limit, table, eos, key):
+            return body(params, tokens, cache, index, active, limit, table,
+                        eos, None, key)
     else:
         def fn(params, tokens, cache, index, active, limit, eos, key):
             return body(params, tokens, cache, index, active, limit, eos,
@@ -350,7 +383,10 @@ def make_admit_step(shardings: Optional[ServeShardings] = None,
             limit, jnp.asarray(row_limit, limit.dtype)[None], (row,))
         return cache, tokens, index, active, limit
 
-    donate = (0, 1, 2, 3, 4)
+    # tokens/active are NOT donated: the overlapped scheduler (dispatch-
+    # then-fetch) still holds the previous decode step's (tokens, active)
+    # for deferred host bookkeeping when an admission runs.
+    donate = (0, 2, 4)
     if shardings is None:
         return jax.jit(fn, donate_argnums=donate)
     r = shardings.replicated
@@ -360,6 +396,130 @@ def make_admit_step(shardings: Optional[ServeShardings] = None,
         fn,
         in_shardings=(shardings.cache, shardings.tokens, r, r, r,
                       row_sh, r, r, r, r),
+        out_shardings=(shardings.cache, shardings.tokens, r, r, r),
+        donate_argnums=donate)
+
+
+def make_prefill_chunk_step(cfg: ModelConfig, final: bool = False,
+                            sample: bool = False,
+                            shardings: Optional[ServeShardings] = None,
+                            carry_shardings=None) -> Callable:
+    """One chunked-prefill step over the paged serve state.
+
+    Non-final chunk:
+        (params, tokens(1,C), cache, carry, table_row(1,NB), ctx_len) ->
+            (cache, carry)
+    Final chunk additionally samples the request's first token on device:
+        (params, tokens, cache, carry, table_row, ctx_len[, temp], key) ->
+            (first_token(1,1), cache, carry, key)
+
+    ``cache`` is the LIVE batch paged state (donated: the chunk writes its
+    K/V straight into the shared pool through the request's block-table
+    row — admission never copies pages); ``carry`` is the request's B=1
+    window-ring/recurrent-state carry (donated, threaded across chunks).
+    ``ctx_len`` is traced: one executable per chunk WIDTH (widths are the
+    powers of two of the binary prompt decomposition, so the executable
+    count is O(log max_len), not O(#prompt lengths))."""
+    api = registry.get_model(cfg)
+    if api.prefill_chunk is None:
+        raise NotImplementedError(f"{cfg.name}: no chunked-prefill path")
+
+    def run(params, tokens, cache, carry, table, ctx_len):
+        return api.prefill_chunk(params, cfg, tokens, cache, carry, table,
+                                 ctx_len)
+
+    if not final:
+        def fn(params, tokens, cache, carry, table, ctx_len):
+            _, cache, carry = run(params, tokens, cache, carry, table,
+                                  ctx_len)
+            return cache, carry
+        n_extra = 0
+    else:
+        def body(params, tokens, cache, carry, table, ctx_len, temp, key):
+            logits, cache, carry = run(params, tokens, cache, carry, table,
+                                       ctx_len)
+            nxt, key = _sample(logits[:, 0], temp, key, sample)
+            return nxt[:, None].astype(jnp.int32), cache, carry, key
+        if sample:
+            fn = body
+        else:
+            def fn(params, tokens, cache, carry, table, ctx_len, key):
+                return body(params, tokens, cache, carry, table, ctx_len,
+                            None, key)
+        n_extra = 2 if sample else 1       # [temp,] key
+
+    donate = (2, 3)
+    if shardings is None:
+        return jax.jit(fn, donate_argnums=donate)
+    r = shardings.replicated
+    carry_sh = carry_shardings if carry_shardings is not None else r
+    ins = (shardings.params, r, shardings.cache, carry_sh, r, r) \
+        + (r,) * n_extra
+    outs = (shardings.cache, carry_sh) if not final \
+        else (r, shardings.cache, carry_sh, r)
+    return jax.jit(fn, in_shardings=ins, out_shardings=outs,
+                   donate_argnums=donate)
+
+
+def make_paged_admit_step(shardings: Optional[ServeShardings] = None,
+                          carry_shardings=None) -> Callable:
+    """(cache, tokens, index, active, limit,
+        carry, row_tok(1,1), row_len, row_limit, row) ->
+           (cache, tokens, index, active, limit).
+
+    Paged admission: the request's pages are ALREADY in the pool (chunked
+    prefill wrote them through the block table), so only the small per-row
+    state moves — window rings and mamba/rwkv recurrent rows from the B=1
+    prefill carry, plus tokens/cursor/active/limit.  Every per-row cache
+    leaf is first ZEROED at ``row`` and then overwritten by the carry where
+    the carry covers it, so a freed-and-readmitted slot is byte-identical
+    to a fresh one even for leaves a carry might not carry (regression:
+    tests/test_serving_continuous.py).  Pool leaves are untouched."""
+
+    def fn(cache, tokens, index, active, limit,
+           carry, row_tok, row_len, row_limit, row):
+        row = jnp.asarray(row, jnp.int32)
+        carry_leaves = {
+            tuple(str(getattr(p, "key", p)) for p in path): leaf
+            for path, leaf in
+            jax.tree_util.tree_flatten_with_path(carry)[0]}
+
+        def put(big, r_leaf):
+            starts = (jnp.int32(0), row) + (jnp.int32(0),) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(big, r_leaf.astype(big.dtype),
+                                                starts)
+
+        def admit_leaf(path, big):
+            if _is_paged_leaf(path):
+                return big
+            key = tuple(str(getattr(p, "key", p)) for p in path)
+            zeros = jnp.zeros((big.shape[0], 1) + big.shape[2:], big.dtype)
+            big = put(big, zeros)
+            if key in carry_leaves:
+                big = put(big, carry_leaves[key])
+            return big
+
+        cache = jax.tree_util.tree_map_with_path(admit_leaf, cache)
+        tokens = jax.lax.dynamic_update_slice(
+            tokens, row_tok.astype(tokens.dtype), (row, jnp.int32(0)))
+        index = jax.lax.dynamic_update_slice(
+            index, jnp.asarray(row_len, index.dtype)[None], (row,))
+        active = jax.lax.dynamic_update_slice(
+            active, (jnp.asarray(row_len, jnp.int32)
+                     < jnp.asarray(row_limit, jnp.int32))[None], (row,))
+        limit = jax.lax.dynamic_update_slice(
+            limit, jnp.asarray(row_limit, limit.dtype)[None], (row,))
+        return cache, tokens, index, active, limit
+
+    donate = (0, 2, 4)       # tokens/active held by the overlapped fetch
+    if shardings is None:
+        return jax.jit(fn, donate_argnums=donate)
+    r = shardings.replicated
+    carry_sh = carry_shardings if carry_shardings is not None else r
+    return jax.jit(
+        fn,
+        in_shardings=(shardings.cache, shardings.tokens, r, r, r,
+                      carry_sh, r, r, r, r),
         out_shardings=(shardings.cache, shardings.tokens, r, r, r),
         donate_argnums=donate)
 

@@ -2,14 +2,24 @@
 # Canonical tier-1 test entrypoint (olmax-style).
 #
 #   bash test.sh                      # full suite (tier-1; includes
-#                                     # tests/test_serving_continuous.py)
+#                                     # tests/test_serving_continuous.py and
+#                                     # tests/test_serving_paged.py)
 #   bash test.sh tests/test_core.py   # one module
 #   bash test.sh -m "not slow"        # skip the multi-device parity tests
+#   bash test.sh --paged-smoke        # fast lane: paged-KV/chunked-prefill
+#                                     # serving + paged-attention kernel
+#                                     # parity only (single-device subset)
 #
 # 8 fake CPU devices so the sharded train engine and the multi-device tests
 # (tests/test_distributed.py) exercise real GSPMD partitioning hermetically.
 set -euo pipefail
 cd "$(dirname "$0")"
+
+if [[ "${1:-}" == "--paged-smoke" ]]; then
+  shift
+  set -- tests/test_serving_paged.py tests/test_kernels.py -k \
+      "paged or pool or chunk" -m "not slow" "$@"
+fi
 
 # https://github.com/tensorflow/tensorflow/blob/master/tensorflow/compiler/xla/xla.proto
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"

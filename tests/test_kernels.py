@@ -12,6 +12,8 @@ from repro.kernels.mamba_scan.ref import selective_scan_ref
 from repro.kernels.newton_schulz import kernel as ns_kernel
 from repro.kernels.newton_schulz import ops as ns_ops
 from repro.kernels.newton_schulz.ref import newton_schulz_ref
+from repro.kernels.paged_attention import ref as pa_ref
+from repro.kernels.paged_attention.kernel import paged_attention_tpu
 from repro.kernels.rwkv6.kernel import wkv_tpu
 from repro.kernels.rwkv6.ref import wkv_ref
 
@@ -64,6 +66,59 @@ def test_blocked_attention_cross_ragged():
     ref = fa_ref.naive_attention(q, k, v, causal=False)
     blk = fa_ref.blocked_attention(q, k, v, causal=False, block_k=16)
     np.testing.assert_allclose(np.asarray(blk), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+def _paged_case(seed, B, H, KV, hd, bs, NB, spare=3):
+    """Random pool + permuted block tables + ragged cursors.  NP includes
+    spare pages so tables exercise non-identity physical placement."""
+    NP = B * NB + spare
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    kp = jax.random.normal(ks[1], (NP, bs, KV, hd))
+    vp = jax.random.normal(ks[2], (NP, bs, KV, hd))
+    rng = np.random.default_rng(seed)
+    tbl = jnp.asarray(rng.permutation(NP)[:B * NB].reshape(B, NB), jnp.int32)
+    idx = jnp.asarray(rng.integers(0, NB * bs, (B,)), jnp.int32)
+    return q, kp, vp, tbl, idx
+
+
+@pytest.mark.parametrize("H,KV,hd,bs,NB", [(4, 2, 16, 8, 4), (2, 2, 32, 16, 2),
+                                           (8, 2, 8, 4, 6)])
+def test_paged_attention_kernel_vs_ref(H, KV, hd, bs, NB):
+    q, kp, vp, tbl, idx = _paged_case(0, 3, H, KV, hd, bs, NB)
+    ref = pa_ref.paged_attention_ref(q, kp, vp, tbl, idx)
+    pal = paged_attention_tpu(q, kp, vp, tbl, idx, interpret=True)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_paged_attention_kernel_softcap_and_edge_cursors():
+    q, kp, vp, tbl, _ = _paged_case(1, 2, 4, 4, 16, 8, 4)
+    for idx in ([0, 0], [31, 7]):            # first slot only / full + ragged
+        idx = jnp.asarray(idx, jnp.int32)
+        ref = pa_ref.paged_attention_ref(q, kp, vp, tbl, idx,
+                                         logit_softcap=20.0)
+        pal = paged_attention_tpu(q, kp, vp, tbl, idx, logit_softcap=20.0,
+                                  interpret=True)
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_paged_ref_matches_contiguous_gather():
+    """The gather path == masked attention over the logically contiguous
+    layout (same math the contiguous decode uses, by construction)."""
+    q, kp, vp, tbl, idx = _paged_case(2, 2, 4, 2, 16, 8, 4)
+    S = tbl.shape[1] * kp.shape[1]
+    k = pa_ref.gather_pages(kp, tbl)
+    v = pa_ref.gather_pages(vp, tbl)
+    valid = (jnp.arange(S)[None, :] <= idx[:, None])[:, None, :]
+    want = pa_ref.masked_gqa_attention(q, k, v, valid)
+    got = pa_ref.paged_attention_ref(q, kp, vp, tbl, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 # ---------------------------------------------------------------------------

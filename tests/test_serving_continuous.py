@@ -238,6 +238,51 @@ def test_masked_decode_freezes_inactive_rows():
 
 
 # ---------------------------------------------------------------------------
+# Freed-and-readmitted slots are byte-identical to fresh ones (SSM/RWKV
+# recurrent state rows must not leak across tenants)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["mamba", "rwkv"])
+def test_readmitted_slot_state_is_byte_identical_to_fresh(arch):
+    """Serve a request in slot 0, let it terminate (slot freed), then admit
+    a second request into the same slot: every recurrent-state row (conv /
+    ssm for mamba; tm_x / cm_x / wkv for rwkv) must be byte-identical to
+    admitting that request into a FRESH engine's slot 0 — the admit step
+    zeroes + overwrites the whole row, so no trace of the previous tenant
+    survives."""
+    cfg = ARCH_CFGS[arch]
+    params = _params(cfg)
+    rng = np.random.default_rng(11)
+    first = Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (6,)).astype(np.int32),
+                    max_new_tokens=4)
+    second = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+
+    def admit_second(state, eng):
+        state, tok, rc = eng.prefill_request(state, second)
+        return eng.admit_request(state, 0, tok, rc, len(second), 6)
+
+    eng = ServeEngine(cfg, params, max_len=48)
+    # used path: run the first request to termination in slot 0, readmit
+    used = eng.continuous_state(1)
+    state_a, tok, rc = eng.prefill_request(used, first.prompt)
+    state_a = eng.admit_request(state_a, 0, tok, rc, len(first.prompt), 2)
+    for _ in range(3):
+        state_a = eng.decode_masked(state_a)      # terminates, slot freed
+    assert not np.asarray(state_a.active)[0]
+    state_a = admit_second(state_a, eng)
+    # fresh path: same second request into a never-used state
+    state_b = admit_second(eng.continuous_state(1), eng)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state_a.cache, state_b.cache)
+    np.testing.assert_array_equal(np.asarray(state_a.index),
+                                  np.asarray(state_b.index))
+    np.testing.assert_array_equal(np.asarray(state_a.limit),
+                                  np.asarray(state_b.limit))
+
+
+# ---------------------------------------------------------------------------
 # Greedy executables take no temperature (dead-operand satellite)
 # ---------------------------------------------------------------------------
 

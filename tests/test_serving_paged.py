@@ -1,0 +1,274 @@
+"""Paged KV cache + chunked prefill on the serve engine.
+
+The paged engine must be a *numerical no-op* relative to contiguous solo
+generation: with K/V living in a shared page pool addressed through block
+tables, prompts prefilled in power-of-two chunks, admission gated on block
+commitments, and the scheduler double-buffering its host fetch, every
+request's greedy tokens are byte-identical to running it alone through the
+contiguous ``ServeEngine.generate`` — on a 1x1 mesh, on the 8-device mesh,
+and through a ``copying_zeroL`` depth expansion.  Structurally: the block
+pool's free-list invariants hold under Poisson arrival/EOS churn
+(hypothesis fuzz), free-on-EOS reclaims pages for later admissions, and
+the per-length B=1 prefill executable cache is LRU-bounded.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.core import expansion as exp
+from repro.distributed import sharding as shd
+from repro.launch import mesh as mesh_lib
+from repro.models import registry
+from repro.train.kv_pool import KVBlockPool, PoolExhausted
+from repro.train.serve_engine import ServeEngine, pow2_chunks
+from repro.train.serve_scheduler import ContinuousScheduler, Request
+
+CFG_DENSE = ModelConfig(name="pg-dense", family="dense", num_layers=4,
+                        d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                        vocab_size=64, max_seq_len=64)
+CFG_WINDOW = dataclasses.replace(CFG_DENSE, name="pg-window",
+                                 window_pattern=(4, 0))
+CFG_MAMBA = ModelConfig(name="pg-mamba", family="ssm", num_layers=4,
+                        d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
+                        vocab_size=64, max_seq_len=64, attention="none",
+                        position="none", block_pattern=("mamba",),
+                        ssm=SSMConfig(d_state=4))
+CFG_RWKV = ModelConfig(name="pg-rwkv", family="ssm", num_layers=4,
+                       d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
+                       vocab_size=64, max_seq_len=64, attention="none",
+                       position="none", norm="layernorm",
+                       block_pattern=("rwkv",),
+                       ssm=SSMConfig(kind="rwkv6", head_dim=16))
+ARCH_CFGS = {"dense": CFG_DENSE, "window": CFG_WINDOW, "mamba": CFG_MAMBA,
+             "rwkv": CFG_RWKV}
+
+REQ_SHAPES = ((5, 7), (9, 4), (3, 10), (6, 2), (4, 8), (7, 5), (2, 6),
+              (8, 3))
+
+
+def _params(cfg, seed=0):
+    return registry.get_model(cfg).init(jax.random.PRNGKey(seed), cfg)
+
+
+def _requests(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (p,)).astype(np.int32),
+                    max_new_tokens=g) for p, g in REQ_SHAPES]
+
+
+def _assert_solo_parity(cfg, engine, requests, results):
+    solo = ServeEngine(cfg, engine.params,
+                       mesh=mesh_lib.single_device_mesh(), max_len=48)
+    for req, res in zip(requests, results):
+        want = solo.generate(req.prompt[None, :], req.max_new_tokens).tokens
+        np.testing.assert_array_equal(res.tokens, want[0])
+        assert len(res.new_tokens) == req.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# Paged + chunked == contiguous solo, byte for byte
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", list(ARCH_CFGS))
+def test_paged_matches_solo_single_device(arch):
+    """Tight pool (8 pages of 4 tokens — admission must wait on
+    free-on-EOS), chunk_len 4, max_batch 2: tokens still byte-identical to
+    contiguous solo generation."""
+    cfg = ARCH_CFGS[arch]
+    eng = ServeEngine(cfg, _params(cfg), max_len=48, paged=True,
+                      block_size=4)
+    reqs = _requests(cfg)
+    sched = ContinuousScheduler(eng, max_batch=2, chunk_len=4, num_blocks=8)
+    _assert_solo_parity(cfg, eng, reqs, sched.run(reqs))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["dense", "window"])
+def test_paged_matches_solo_mesh8(arch):
+    """Same parity on the 8-device data-parallel mesh (max_batch 4)."""
+    cfg = ARCH_CFGS[arch]
+    eng = ServeEngine(cfg, _params(cfg),
+                      mesh=mesh_lib.make_train_mesh("host"), max_len=48,
+                      paged=True, block_size=4)
+    reqs = _requests(cfg)
+    results = ContinuousScheduler(eng, max_batch=4, chunk_len=4).run(reqs)
+    _assert_solo_parity(cfg, eng, reqs, results)
+
+
+@pytest.mark.slow
+def test_paged_serves_expanded_checkpoint_identically():
+    """copying_zeroL 2->4 expansion served PAGED produces the identical
+    token stream as the pre-expansion params served contiguous solo (the
+    paper's drop-in-continuation claim survives the cache redesign)."""
+    cfg2, cfg4 = CFG_DENSE.with_depth(2), CFG_DENSE.with_depth(4)
+    p2 = _params(cfg2, seed=1)
+    p4 = exp.expand_params(p2, cfg2, 4, "copying_zeroL")
+    reqs = _requests(cfg2)[:4]
+    eng4 = ServeEngine(cfg4, p4, max_len=48, paged=True, block_size=4)
+    results = ContinuousScheduler(eng4, max_batch=2, chunk_len=4).run(reqs)
+    solo2 = ServeEngine(cfg2, p2, mesh=mesh_lib.single_device_mesh(),
+                        max_len=48)
+    for req, res in zip(reqs, results):
+        want = solo2.generate(req.prompt[None, :], req.max_new_tokens).tokens
+        np.testing.assert_array_equal(res.tokens, want[0])
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_overlap_is_a_numerical_noop(overlap):
+    """Dispatch-then-fetch double buffering changes WHEN the host observes
+    termination, never what any request decodes."""
+    cfg = CFG_DENSE
+    eng = ServeEngine(cfg, _params(cfg), max_len=48, paged=True,
+                      block_size=4)
+    reqs = _requests(cfg)
+    results = ContinuousScheduler(eng, max_batch=2, chunk_len=4,
+                                  overlap=overlap).run(reqs)
+    _assert_solo_parity(cfg, eng, reqs, results)
+
+
+def test_chunk_widths_and_eos_free():
+    """Chunk widths are the binary decomposition (compile count is
+    O(log max_len)); EOS mid-budget frees pages immediately and the
+    follow-up request is served in the reclaimed slot."""
+    assert pow2_chunks(13) == [8, 4, 1]
+    assert pow2_chunks(13, cap=4) == [4, 4, 4, 1]
+    assert pow2_chunks(1) == [1]
+    assert pow2_chunks(20, cap=7) == [4, 4, 4, 4, 4]
+
+    cfg = CFG_DENSE
+    eng = ServeEngine(cfg, _params(cfg), max_len=48, paged=True,
+                      block_size=4)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    solo = ServeEngine(cfg, eng.params, mesh=mesh_lib.single_device_mesh(),
+                       max_len=48)
+    stream = solo.generate(prompt[None, :], 12).tokens[0, 6:]
+    eos = int(stream[4])
+    cut = int(np.argmax(stream == eos)) + 1
+    other = Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (4,)).astype(np.int32),
+                    max_new_tokens=5)
+    sched = ContinuousScheduler(eng, max_batch=1, eos_id=eos, num_blocks=5)
+    results = sched.run([Request(prompt=prompt, max_new_tokens=12), other])
+    assert results[0].finish_reason == "eos"
+    np.testing.assert_array_equal(results[0].new_tokens, stream[:cut])
+    assert results[1].slot == results[0].slot == 0
+    assert len(results[1].new_tokens) >= 1
+
+
+# ---------------------------------------------------------------------------
+# Block pool: alloc/free invariants under Poisson arrival/EOS churn
+# ---------------------------------------------------------------------------
+
+
+def test_pool_admission_contract():
+    pool = KVBlockPool(num_blocks=8, block_size=4, batch=4, max_blocks=8)
+    assert pool.blocks_needed(5, 7) == 3                 # ceil(12/4)
+    pool.admit(0, 5, 7)
+    assert pool.committed_blocks == 3 and pool.allocated_blocks == 0
+    pool.advance(0, 5)                                   # prompt pages
+    assert pool.allocated_blocks == 2
+    with pytest.raises(PoolExhausted):
+        pool.advance(0, 13)                              # beyond commitment
+    pool.admit(1, 16, 4)                                 # 5 pages -> 8 total
+    with pytest.raises(PoolExhausted):
+        pool.admit(2, 4, 4)                              # 2 more: over 8
+    pool.free(0)
+    assert pool.committed_blocks == 5 and pool.free_blocks == 8
+    pool.admit(2, 4, 4)                                  # fits now
+    pool.check_invariants()
+
+
+def test_pool_fuzz_poisson_arrivals_and_eos():
+    """Random admit/advance/early-EOS churn: the free list never leaks or
+    double-books a page, commitments bound allocation, and an admitted
+    request's advances never fail (the no-preemption guarantee)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 5),      # event row
+                              st.integers(1, 14),     # prompt len
+                              st.integers(1, 10),     # budget
+                              st.integers(0, 9)),     # EOS after e tokens
+                    min_size=1, max_size=60),
+           st.integers(2, 12))
+    def run(events, num_blocks):
+        pool = KVBlockPool(num_blocks=num_blocks, block_size=4, batch=6,
+                           max_blocks=8)
+        live = {}
+        for row, p, g, e in events:
+            if row in live:                  # EOS: free mid-flight
+                pool.free(row)
+                del live[row]
+                pool.check_invariants()
+                continue
+            need = pool.blocks_needed(p, g)
+            if need > min(pool.num_blocks, pool.max_blocks) \
+                    or not pool.can_admit(need):
+                continue
+            pool.admit(row, p, g)
+            tokens = min(p + max(0, g - 1 - e), p + g - 1)
+            for t in range(1, tokens + 1):   # alloc-on-advance, token by token
+                pool.advance(row, t)         # must never raise
+            live[row] = True
+            pool.check_invariants()
+        for row in live:
+            pool.free(row)
+        pool.check_invariants()
+        assert pool.free_blocks == pool.num_blocks
+        assert pool.committed_blocks == 0
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Pool sharding: pages replicated over DP, block table addressable anywhere
+# ---------------------------------------------------------------------------
+
+
+def test_page_pool_sharding_never_splits_pages_over_data():
+    mesh = mesh_lib.make_train_mesh("host")
+    specs = {
+        "layer0": {"k_pages": jax.ShapeDtypeStruct((2, 16, 8, 2, 8),
+                                                   jnp.float32),
+                   "v_pages": jax.ShapeDtypeStruct((2, 16, 8, 2, 8),
+                                                   jnp.float32)},
+        "layer1": {"k": jax.ShapeDtypeStruct((2, 8, 16, 2, 8), jnp.float32)},
+    }
+    sh = shd.cache_shardings(specs, mesh)
+    # pages: dim1 (16 pages, divisible by 8) must stay unsharded over data
+    assert sh["layer0"]["k_pages"].spec[1] is None
+    # contiguous leaf: batch dim still sharded over data as before
+    assert sh["layer1"]["k"].spec[1] == ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-length B=1 prefill executables are LRU-bounded
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_executable_cache_is_bounded():
+    cfg = CFG_DENSE
+    eng = ServeEngine(cfg, _params(cfg), max_len=64, prefill_cache_size=3)
+    state = eng.continuous_state(1)
+    rng = np.random.default_rng(9)
+    for p_len in (3, 5, 7, 9, 11, 5, 3):
+        prompt = rng.integers(0, cfg.vocab_size, (p_len,)).astype(np.int32)
+        state, tok, _ = eng.prefill_request(state, prompt)
+    assert len(eng._prefill_lru) <= 3
+    # most-recently-used lengths survive
+    assert (3, False) in eng._prefill_lru and (5, False) in eng._prefill_lru
+
+
+def test_paged_rejects_mla():
+    cfg = dataclasses.replace(CFG_DENSE, name="pg-mla", attention="mla",
+                              mla_kv_lora_rank=8)
+    with pytest.raises(NotImplementedError):
+        ServeEngine(cfg, _params(cfg), max_len=48, paged=True)
