@@ -571,6 +571,126 @@ def bench_serve_paged(fast=False):
               "run `--only serve_paged` for the mesh layout", flush=True)
 
 
+def bench_serve_spec(fast=False):
+    """Self-speculative decoding vs the paged continuous baseline on the
+    long-tail Poisson workload.
+
+    The served model is a ``copying_zeroL`` depth expansion of a shallow
+    model — the paper's training recipe — so its depth-truncated draft at
+    the pre-expansion depth is function-preserving and the acceptance rate
+    the draft ACTUALLY achieves is 1.0: every speculation round replaces
+    γ+1 sequential full-depth decode steps with γ+1 shallow draft steps
+    plus ONE multi-token verify forward.  Writes ``BENCH_serve_spec.json``
+    (acceptance rate, aggregate tokens/s vs the ``serve_paged`` baseline,
+    TTFT p50/p95 deltas)."""
+    _fake_devices_for_serve()
+    import jax
+    import numpy as np
+    from repro.configs.base import ModelConfig
+    from repro.core import expansion as exp
+    from repro.launch import mesh as mesh_lib
+    from repro.models import registry
+    from repro.train.serve_engine import ServeEngine
+    from repro.train.serve_scheduler import (ContinuousScheduler, Request,
+                                             summarize)
+
+    BS = 8                                             # tokens per page
+    GAMMA = 6
+    DRAFT_LAYERS, TARGET_LAYERS = 2, 16
+    # Deep-enough target that per-step depth dominates dispatch overhead on
+    # CPU — the same regime a real accelerator decode loop lives in — and
+    # decode-heavy generations (speculation accelerates the decode loop;
+    # prefill is shared).
+    BASE = ModelConfig(name="bench-spec", family="dense", num_layers=DRAFT_LAYERS,
+                       d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                       vocab_size=256, max_seq_len=256)
+    DEEP = BASE.with_depth(TARGET_LAYERS)
+    p_lens = np.array([16] + [8, 4, 12, 8, 4, 8, 12, 4, 8, 4, 12, 8, 4, 8,
+                              12])
+    g_lens = np.array([44] + [6, 9, 5, 8, 10, 6, 7, 11, 5, 9, 6, 8, 7, 10,
+                              5]) * 3
+    if fast:
+        p_lens, g_lens = p_lens[:6], g_lens[:6] // 2 + 3
+    N = len(p_lens)
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(0.001, N))
+    max_len = int(p_lens.max() + g_lens.max() + 1)
+    max_batch = 4
+
+    shallow = registry.get_model(BASE).init(jax.random.PRNGKey(0), BASE)
+    params = exp.expand_params(shallow, BASE, TARGET_LAYERS, "copying_zeroL")
+    rng2 = np.random.default_rng(1)
+    reqs = [Request(prompt=rng2.integers(0, BASE.vocab_size,
+                                         (int(p),)).astype(np.int32),
+                    max_new_tokens=int(g), arrival_s=float(a))
+            for p, g, a in zip(p_lens, g_lens, arrivals)]
+
+    def timed_run(sched):
+        t0 = time.perf_counter()
+        results = sched.run(reqs)
+        return summarize(results, time.perf_counter() - t0)
+
+    n_dev = len(jax.devices())
+    meshes = {"single": mesh_lib.single_device_mesh()}
+    if n_dev > 1:
+        meshes[f"mesh{n_dev}"] = mesh_lib.make_train_mesh("host")
+    out = {"requests": N, "block_size": BS, "gamma": GAMMA,
+           "target_layers": TARGET_LAYERS, "draft_layers": DRAFT_LAYERS,
+           "max_batch": max_batch, "arch": DEEP.name,
+           "expansion": "copying_zeroL",
+           "prompt_lens": p_lens.tolist(), "gen_lens": g_lens.tolist(),
+           "layouts": {}}
+    reps = 1 if fast else 5
+    for name, mesh in meshes.items():
+        base_eng = ServeEngine(DEEP, params, mesh=mesh, max_len=max_len,
+                               paged=True, block_size=BS)
+        spec_eng = ServeEngine(DEEP, params, mesh=mesh, max_len=max_len,
+                               paged=True, block_size=BS, spec_decode=True,
+                               gamma=GAMMA, draft_depth=DRAFT_LAYERS)
+        base_s = ContinuousScheduler(base_eng, max_batch=max_batch)
+        spec_s = ContinuousScheduler(spec_eng, max_batch=max_batch)
+        base_s.warmup(reqs)
+        spec_s.warmup(reqs)
+        base = spec = spec_stats = None
+        ratios = []
+        for _ in range(reps):          # interleaved, median-paired (PR 4)
+            b = timed_run(base_s)
+            s = timed_run(spec_s)
+            ratios.append(s["tokens_per_s"] / max(b["tokens_per_s"], 1e-9))
+            if base is None or b["tokens_per_s"] > base["tokens_per_s"]:
+                base = b
+            if spec is None or s["tokens_per_s"] > spec["tokens_per_s"]:
+                spec = s              # telemetry snapshot of the SAME rep
+                spec_stats = spec_s.spec_stats()
+        speedup = float(np.median(ratios))
+        spec.update(spec_stats)
+        out["layouts"][name] = {
+            "paged_baseline": base, "speculative": spec,
+            "throughput_speedup": speedup,
+            "acceptance_rate": spec_stats["acceptance_rate"],
+            "ttft_p50_delta_ms": (spec["ttft_p50_s"]
+                                  - base["ttft_p50_s"]) * 1e3,
+            "ttft_p95_delta_ms": (spec["ttft_p95_s"]
+                                  - base["ttft_p95_s"]) * 1e3}
+        _row(f"serve_spec/{name}", spec["wall_s"] * 1e6,
+             f"tokens_per_s={spec['tokens_per_s']:.1f};"
+             f"baseline={base['tokens_per_s']:.1f};"
+             f"speedup={speedup:.2f};"
+             f"acceptance={spec_stats['acceptance_rate']:.2%};"
+             f"ttft_p50_ms={spec['ttft_p50_s'] * 1e3:.1f}"
+             f"({(spec['ttft_p50_s'] - base['ttft_p50_s']) * 1e3:+.1f});"
+             f"ttft_p95_ms={spec['ttft_p95_s'] * 1e3:.1f}"
+             f"({(spec['ttft_p95_s'] - base['ttft_p95_s']) * 1e3:+.1f})")
+    if n_dev > 1:
+        with open("BENCH_serve_spec.json", "w") as f:
+            json.dump(out, f, indent=1)
+        print("# wrote BENCH_serve_spec.json", flush=True)
+    else:
+        print("# single device only (jax initialized before "
+              "bench_serve_spec); BENCH_serve_spec.json left untouched — "
+              "run `--only serve_spec` for the mesh layout", flush=True)
+
+
 BENCHES = {
     "expansion_init": bench_expansion_init,
     "copying_variants": bench_copying_variants,
@@ -581,11 +701,13 @@ BENCHES = {
     "mup_transfer": bench_mup_transfer,
     "theory": bench_theory,
     "kernels": bench_kernels,
-    # last three: mutate the jax environment when they run first
-    # (`--only serve` / `--only serve_continuous` / `--only serve_paged`)
+    # last four: mutate the jax environment when they run first
+    # (`--only serve` / `--only serve_continuous` / `--only serve_paged`
+    #  / `--only serve_spec`)
     "serve": bench_serve,
     "serve_continuous": bench_serve_continuous,
     "serve_paged": bench_serve_paged,
+    "serve_spec": bench_serve_spec,
 }
 
 

@@ -182,6 +182,47 @@ def expand_params(params, cfg: ModelConfig, target_layers: int, method: str,
     return new_params
 
 
+def truncate_params(params, cfg: ModelConfig, num_layers: int):
+    """Depth-TRUNCATED model: the first ``num_layers`` layers plus the
+    shared embedding / final norm / (tied) LM head — the expansion's
+    inverse, and the free draft model of self-speculative decoding.
+
+    Zero/one-layer progressive training makes every depth prefix of the
+    grown model a model the run actually trained through: expansion methods
+    that append new blocks on top of the source stack (the
+    ``copying_zeroL`` default — target block i copies source block
+    ``i % n_src``, new blocks are the zeroed tail) leave the first
+    ``n_src`` blocks byte-identical to the pre-expansion checkpoint, so
+    ``truncate_params(expanded, cfg, pre_depth)`` IS that checkpoint with
+    the (shared, unchanged) embed/head attached.  ``num_layers == 0``
+    degenerates to the paper's zero-layer model: [embedding, LM head].
+
+    Non-block leaves (embed / norms / head) are the SAME arrays — shared,
+    never copied.  Block leaves are ``x[:n_keep]`` prefixes of the stacked
+    scan axis: views on host numpy arrays; on committed device arrays the
+    slice materializes a copy of the (shallow) prefix — the draft's only
+    parameter-memory cost.
+    """
+    period = cfg.pattern_period
+    if num_layers % period:
+        raise ValueError(f"draft depth {num_layers} not a multiple of the "
+                         f"layer pattern period {period}")
+    if num_layers < 0:
+        raise ValueError(f"draft depth {num_layers} < 0")
+    out = {k: v for k, v in params.items() if k != "blocks"}
+    n_keep = num_layers // period
+    if n_keep:
+        if "blocks" not in params:
+            raise ValueError(f"draft depth {num_layers} exceeds model "
+                             "depth 0 (zero-layer source)")
+        n_src = jax.tree.leaves(params["blocks"])[0].shape[0]
+        if n_keep > n_src:
+            raise ValueError(f"draft depth {num_layers} exceeds model depth "
+                             f"{n_src * period}")
+        out["blocks"] = jax.tree.map(lambda x: x[:n_keep], params["blocks"])
+    return out
+
+
 def make_expand_fn(cfg: ModelConfig, target_layers: int, method: str,
                    params, opt_state, insert_at: str = "bottom",
                    opt_state_policy: str = "inherit", dtype=jnp.float32,

@@ -53,10 +53,12 @@ def paged_attention_decode(q, k_pages, v_pages, k_new, v_new, page, off,
 def paged_prefill_attention(q, k_pages, v_pages, block_table, ctx_len, *,
                             logit_softcap: float = 0.0):
     """Chunked prefill: C queries at positions ctx_len..ctx_len+C-1 over the
-    row's pages (which already hold the chunk's own K/V).  Gather + exact
-    masked math on every backend — the chunk matmul is already MXU-shaped,
-    so a dedicated prefill kernel buys little; the decode step is the
-    page-granular hot path."""
+    row's pages (which already hold the chunk's own K/V).  ``ctx_len`` is a
+    traced scalar, or a per-row (B,) vector for the speculative verify path
+    (every row scored at its own cursor).  Gather + exact masked math on
+    every backend — the chunk matmul is already MXU-shaped, so a dedicated
+    prefill kernel buys little; the decode step is the page-granular hot
+    path."""
     return ref.paged_prefill_attention_ref(
         q, k_pages, v_pages, block_table, ctx_len,
         logit_softcap=logit_softcap)

@@ -134,8 +134,10 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, ctx_len, *,
     """Chunked-prefill attention through the block table.
 
     q: (B, C, H, hd) — the chunk's queries at absolute positions
-    ``ctx_len + arange(C)`` (ctx_len may be a traced scalar; one executable
-    serves every chunk position); pages already hold the chunk's own K/V.
+    ``ctx_len + arange(C)``; pages already hold the chunk's own K/V.
+    ``ctx_len`` is a traced scalar (one executable serves every chunk
+    position) or a per-row ``(B,)`` vector — the verify path of
+    speculative decoding scores rows at unrelated cursors in one chunk.
     Valid keys for query t: slots ``s <= t`` (previously prefilled context
     plus the in-chunk causal triangle).  Returns (B, C, H, hd).
     """
@@ -143,7 +145,34 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, ctx_len, *,
     k = gather_pages(k_pages, block_table).astype(q.dtype)
     v = gather_pages(v_pages, block_table).astype(q.dtype)
     S = k.shape[1]
-    qpos = jnp.asarray(ctx_len, jnp.int32) + jnp.arange(C)          # (C,)
-    valid = jnp.arange(S)[None, :] <= qpos[:, None]                 # (C, S)
-    valid = jnp.broadcast_to(valid[None], (B, C, S))
+    ctx = jnp.asarray(ctx_len, jnp.int32)
+    if ctx.ndim == 0:
+        ctx = jnp.broadcast_to(ctx, (B,))
+    qpos = ctx[:, None] + jnp.arange(C)[None, :]                    # (B, C)
+    valid = jnp.arange(S)[None, None, :] <= qpos[:, :, None]        # (B, C, S)
     return masked_gqa_attention(q, k, v, valid, logit_softcap)
+
+
+def masked_gqa_attention_per_query(q, k, v, valid, logit_softcap: float = 0.0):
+    """Grouped-query attention where every query has its OWN key set.
+
+    q: (B, C, H, hd); k, v: (B, C, S, KV, hd) — key s of query c is that
+    query's s-th context entry; valid: (B, C, S) bool.  Returns
+    (B, C, H, hd).  Same score/softmax math as ``masked_gqa_attention`` —
+    the key axis is reduced in the same (slot) order, which is what lets
+    the speculative verify path reproduce the sliding-window decode's
+    ring-slot-ordered softmax bit for bit: each verify query gathers the
+    exact ring state a sequential decode at its position would attend to,
+    laid out in the same slot order.
+    """
+    B, C, H, hd = q.shape
+    KV = k.shape[3]
+    G = H // KV
+    qg = q.reshape(B, C, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bqskh->bkgqs", qg, k) \
+        / jnp.sqrt(hd).astype(q.dtype)
+    scores = _softcap(scores, logit_softcap)
+    scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bqskh->bqkgh", probs, v)
+    return out.reshape(B, C, H, hd)

@@ -31,6 +31,18 @@ cache: a shared pool of ``--num-blocks`` pages of ``--block-size`` tokens
 prompts prefilled ``--chunk-len`` tokens per scheduler iteration straight
 into the pool, pages freed on EOS.  ``--no-overlap`` disables the
 scheduler's dispatch-then-fetch double buffering (debugging).
+
+``--spec-depth N`` (with ``--paged``) turns on SELF-SPECULATIVE decoding:
+the depth-N truncation of the served model (shared embedding / final norm
+/ tied head — progressive training's free draft) proposes ``--gamma``
+tokens per iteration and the full model verifies them in one multi-token
+forward through the block table; rejected tokens roll back by cursor
+rewind + page release.  ``--draft-checkpoint DIR`` drafts with an
+externally trained shallower checkpoint (restored at its manifest depth —
+e.g. the pre-expansion checkpoint of the served model) instead of
+truncating.  ``--age-limit S`` bounds first-fit admission starvation
+(aging).  Greedy streams are byte-identical either way; the run reports
+the draft acceptance rate.
 """
 from __future__ import annotations
 
@@ -105,9 +117,23 @@ def main(argv=None):
                     help="max prefill chunk width per iteration for --paged")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable dispatch-then-fetch double buffering")
+    ap.add_argument("--spec-depth", type=int, default=None,
+                    help="self-speculative decoding: draft = the served "
+                         "model truncated to this many layers (with --paged)")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="draft tokens proposed per speculation round")
+    ap.add_argument("--draft-checkpoint", default=None,
+                    help="draft from this checkpoint (restored at its "
+                         "manifest depth) instead of depth truncation")
+    ap.add_argument("--age-limit", type=float, default=None,
+                    help="admission aging threshold in seconds (paged "
+                         "first-fit blocks for the oldest request past it)")
     args = ap.parse_args(argv)
     if args.paged and not args.continuous:
         raise SystemExit("--paged requires --continuous")
+    spec = args.spec_depth is not None or args.draft_checkpoint is not None
+    if spec and not args.paged:
+        raise SystemExit("--spec-depth/--draft-checkpoint require --paged")
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -117,11 +143,17 @@ def main(argv=None):
     else:
         api = registry.get_model(cfg)
         params = api.init(jax.random.PRNGKey(args.seed), cfg)
+    draft_params = None
+    if args.draft_checkpoint:          # its own latest step, manifest depth
+        draft_params, _ = load_params(args.draft_checkpoint, cfg)
     rng = np.random.default_rng(args.seed)
     engine = ServeEngine(cfg, params, mesh=mesh,
                          max_len=args.prompt_len + max(args.gen, 1) + 1,
                          paged=args.paged, block_size=args.block_size,
-                         num_blocks=args.num_blocks)
+                         num_blocks=args.num_blocks,
+                         spec_decode=spec, gamma=args.gamma,
+                         draft_depth=args.spec_depth,
+                         draft_params=draft_params)
 
     if args.continuous:
         lens = rng.integers(max(2, args.prompt_len // 4), args.prompt_len + 1,
@@ -137,14 +169,15 @@ def main(argv=None):
                                     temperature=args.temperature,
                                     eos_id=args.eos, seed=args.seed,
                                     chunk_len=args.chunk_len,
-                                    overlap=not args.no_overlap)
+                                    overlap=not args.no_overlap,
+                                    admission_age_s=args.age_limit)
         sched.warmup(reqs)             # compile outside the timed run
         t0 = time.perf_counter()
         results = sched.run(reqs, on_finish=lambda r: print(
             f"  req {r.uid}: +{len(r.new_tokens)} tok ({r.finish_reason}) "
             f"ttft={r.ttft_s * 1e3:.1f}ms"))
         stats = summarize(results, time.perf_counter() - t0)
-        mode = "paged" if args.paged else "continuous"
+        mode = "spec" if spec else ("paged" if args.paged else "continuous")
         print(f"arch={cfg.name} layers={cfg.num_layers} mesh={args.mesh} "
               f"{mode} max_batch={args.max_batch} "
               f"requests={args.requests} "
@@ -152,6 +185,14 @@ def main(argv=None):
         print(f"aggregate tokens/s={stats['tokens_per_s']:.1f}  "
               f"ttft p50={stats['ttft_p50_s'] * 1e3:.1f}ms "
               f"p95={stats['ttft_p95_s'] * 1e3:.1f}ms")
+        if spec:
+            ss = sched.spec_stats()
+            mal = [r.mean_accepted_len for r in results if r.spec_rounds]
+            print(f"speculative: draft_layers={engine.draft_cfg.num_layers} "
+                  f"gamma={engine.gamma} rounds={ss['spec_rounds']} "
+                  f"acceptance={ss['acceptance_rate']:.2%} "
+                  f"mean_accepted_len="
+                  f"{np.mean(mal) if mal else 0.0:.2f}")
         return
 
     prompts = rng.integers(0, cfg.vocab_size,

@@ -274,6 +274,118 @@ def attn_decode_paged(p, cfg: ModelConfig, x: jax.Array, cache, block_table,
     return out, new_cache
 
 
+def attn_verify_chunk(p, cfg: ModelConfig, x: jax.Array, cache, index,
+                      positions: jax.Array, window: int, block_table=None,
+                      write_mask=None) -> Tuple[jax.Array, dict]:
+    """Multi-token VERIFY forward for self-speculative decoding.
+
+    x: (B, C, D) — each row's [current token, γ draft tokens] at absolute
+    positions ``index[b] .. index[b] + C - 1`` (``index`` is the per-row
+    decode cursor, traced — every row verifies at its own offset in one
+    executable).  The target model scores all C positions at once; the
+    accept rule then keeps a per-row prefix.
+
+    Full-attention layers (``window == 0``) write the chunk's K/V through
+    the block table exactly like ``attn_prefill_chunk``, except at PER-ROW
+    offsets and under a per-(row, position) ``write_mask``: masked writes
+    (inactive rows; positions at/after the row's limit) are redirected to
+    the trash page.  Rejected positions need no masking — their K/V lands
+    beyond the rewound cursor, is never readable (validity is
+    ``slot <= cursor``), and is overwritten before the cursor reaches it
+    again, so rollback is pure cursor/page bookkeeping.
+
+    Sliding-window layers must NOT advance their ring in place (a rejected
+    token's write would destroy the ring entry it displaced, which rollback
+    still needs).  Instead each verify query gathers the EXACT ring state a
+    sequential decode at its position would see — per slot s, the latest
+    position ``t <= q_pos`` with ``t ≡ s (mod W)``, taken from the ring
+    (t < cursor) or from the chunk's own K/V (t >= cursor) — laid out in
+    ring-slot order, so the softmax reduces in the decode step's key order
+    and greedy verify == sequential decode bit for bit.  The ring advance
+    is DEFERRED: the chunk K/V comes back under ``pending`` and
+    ``spec_ring_commit`` applies each row's accepted prefix after the
+    accept rule runs.
+    """
+    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+        raise NotImplementedError(
+            f"{cfg.name}: speculative verify covers standard K/V attention")
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.kernels.paged_attention import ref as paged_ref
+    B, C, _ = x.shape
+    index = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (B,))
+    q, k_new, v_new, _ = _project_qkv(p, cfg, x)
+    q, k_new = _qk_norm(p, cfg, q, k_new)
+    q, k_new = _position_encode(cfg, q, k_new, positions)
+    pos = index[:, None] + jnp.arange(C)[None, :]              # (B, C)
+
+    if window <= 0:                              # paged pool layer
+        bs = cache["k_pages"].shape[1]
+        trash = cache["k_pages"].shape[0] - 1
+        page = jnp.take_along_axis(block_table, pos // bs, axis=1)
+        if write_mask is not None:
+            page = jnp.where(write_mask, page, trash)
+        off = pos % bs
+        k_pages = cache["k_pages"].at[page, off].set(
+            k_new.astype(cache["k_pages"].dtype))
+        v_pages = cache["v_pages"].at[page, off].set(
+            v_new.astype(cache["v_pages"].dtype))
+        new_cache = {"k_pages": k_pages, "v_pages": v_pages}
+        out = pa_ops.paged_prefill_attention(
+            q, k_pages.astype(x.dtype), v_pages.astype(x.dtype), block_table,
+            index, logit_softcap=cfg.attn_logit_softcap)
+    else:                                        # ring layer, deferred commit
+        W = cache["k"].shape[1]
+        # Per (b, query c, ring slot s): the position the decode step's ring
+        # would hold at slot s when decoding position pos[b, c].
+        t = pos[:, :, None] - ((pos[:, :, None] - jnp.arange(W)[None, None, :])
+                               % W)                            # (B, C, W)
+        from_ring = t < index[:, None, None]
+        ci = jnp.clip(t - index[:, None, None], 0, C - 1)
+        # Chunk K/V round-trips through the cache dtype (as an in-place ring
+        # write would) so mixed-precision caches stay bit-identical to the
+        # sequential decode path.
+        k_rt = k_new.astype(cache["k"].dtype).astype(x.dtype)
+        v_rt = v_new.astype(cache["v"].dtype).astype(x.dtype)
+        sel = from_ring[..., None, None]
+        keys = jnp.where(
+            sel, cache["k"].astype(x.dtype)[:, None],
+            jnp.take_along_axis(k_rt[:, None], ci[..., None, None], axis=2))
+        vals = jnp.where(
+            sel, cache["v"].astype(x.dtype)[:, None],
+            jnp.take_along_axis(v_rt[:, None], ci[..., None, None], axis=2))
+        valid = t >= 0
+        out = paged_ref.masked_gqa_attention_per_query(
+            q, keys, vals, valid, cfg.attn_logit_softcap)
+        new_cache = {"k": cache["k"], "v": cache["v"],
+                     "pending": {"k": k_new.astype(cache["k"].dtype),
+                                 "v": v_new.astype(cache["v"].dtype)}}
+    out = out.reshape(B, C, cfg.q_dim) @ p["wo"]
+    return out, new_cache
+
+
+def spec_ring_commit(k, v, pend_k, pend_v, index, acc):
+    """Apply a verify step's deferred ring advance for the ACCEPTED prefix.
+
+    k/v: (n_super, B, W, KV, hd) ring buffers; pend_k/pend_v: (n_super, B,
+    C, KV, hd) chunk K/V from ``attn_verify_chunk``; index: (B,) the
+    cursor the verify ran at; acc: (B,) per-row accepted token count
+    (0 for inactive rows — their ring is untouched).  Slot s receives the
+    LAST accepted chunk token i < acc with ``(index + i) % W == s``
+    (``_fill_cache``'s rule, per row at a traced offset), so the ring ends
+    exactly as a token-by-token decode of the accepted tokens would leave
+    it."""
+    W, C = k.shape[2], pend_k.shape[2]
+    r = (jnp.arange(W)[None, :] - index[:, None]) % W          # (B, W)
+    written = r < acc[:, None]
+    i_last = r + W * ((acc[:, None] - 1 - r) // W)
+    i_safe = jnp.clip(jnp.where(written, i_last, 0), 0, C - 1)
+    gk = jnp.take_along_axis(pend_k, i_safe[None, :, :, None, None], axis=2)
+    gv = jnp.take_along_axis(pend_v, i_safe[None, :, :, None, None], axis=2)
+    keep = written[None, :, :, None, None]
+    return (jnp.where(keep, gk.astype(k.dtype), k),
+            jnp.where(keep, gv.astype(v.dtype), v))
+
+
 def attn_prefill_chunk(p, cfg: ModelConfig, x: jax.Array, cache, ctx_len,
                        positions: jax.Array, window: int,
                        block_table=None) -> Tuple[jax.Array, dict]:

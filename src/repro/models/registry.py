@@ -42,6 +42,16 @@ class ModelApi:
     init_paged_cache: Optional[Callable] = None
     init_prefill_carry: Optional[Callable] = None
     prefill_chunk: Optional[Callable] = None
+    # Self-speculative decoding (depth-truncated drafts; see
+    # repro.train.serve_engine ``spec_decode``):
+    # verify: (params, cfg, tokens(B,C), cache, index(B,), block_table,
+    #   write_mask(B,C)) -> (logits (B,C,V), cache) — ONE multi-token
+    #   forward scoring [current token, γ drafts] at per-row offsets.
+    # spec_commit: (cache, index(B,), acc(B,)) -> cache — applies the
+    #   verify's deferred window-ring advances for each row's accepted
+    #   prefix.
+    verify: Optional[Callable] = None
+    spec_commit: Optional[Callable] = None
 
 
 def _lm_loss(params, cfg, batch, remat=False):
@@ -85,7 +95,9 @@ def get_model(cfg: ModelConfig) -> ModelApi:
                     prefill=transformer.lm_prefill,
                     init_paged_cache=transformer.lm_init_paged_cache,
                     init_prefill_carry=transformer.lm_init_prefill_carry,
-                    prefill_chunk=transformer.lm_prefill_chunk)
+                    prefill_chunk=transformer.lm_prefill_chunk,
+                    verify=transformer.lm_verify,
+                    spec_commit=transformer.lm_spec_commit)
 
 
 # ---------------------------------------------------------------------------

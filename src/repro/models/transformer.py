@@ -448,6 +448,91 @@ def lm_prefill_chunk(params, cfg: ModelConfig, tokens, cache, carry,
     return logits, cache, carry
 
 
+def _verify_layer(lp, cache_l, cfg: ModelConfig, i: int, x, index, positions,
+                  block_table, write_mask):
+    """One layer over a (B, C) verify chunk at per-row offsets ``index``.
+
+    Attention-only: speculative verify needs per-row rollback, which block
+    tables (paged layers) and deferred ring commits (window layers) give;
+    recurrent mamba/rwkv states have no per-prefix rollback yet — the
+    engine gates those archs out of spec decoding."""
+    kind = cfg.layer_kind(i)
+    if kind != "attn":
+        raise NotImplementedError(
+            f"speculative verify covers attention layers only (got {kind}); "
+            "recurrent-state rollback is an open item")
+    h = apply_norm(lp["ln1"], x, cfg.norm)
+    y, cache_l = attn.attn_verify_chunk(lp["attn"], cfg, h, cache_l, index,
+                                        positions, cfg.layer_window(i),
+                                        block_table=block_table,
+                                        write_mask=write_mask)
+    x = x + y
+    h = apply_norm(lp["ln2"], x, cfg.norm)
+    if cfg.layer_is_moe(i):
+        y, _ = mlp_mod.moe_apply(lp["moe"], cfg, h)
+    else:
+        y = mlp_mod.mlp_apply(lp["mlp"], cfg, h)
+    x = x + y
+    x = maybe_shard(x, P(("pod", "data"), "model", None))
+    return x, cache_l
+
+
+def lm_verify(params, cfg: ModelConfig, tokens, cache, index, block_table,
+              write_mask):
+    """Speculative-decoding verify forward: score all C = γ+1 positions of
+    ``tokens`` (B, C) = [current token, γ draft proposals] in ONE compiled
+    pass, with row b's chunk at absolute positions ``index[b] ..
+    index[b]+C-1``.  K/V goes through the block table at per-row traced
+    offsets (``write_mask`` (B, C) redirects inactive rows / positions at
+    or past the row's limit to the trash page); window rings defer their
+    advance into ``pending`` entries that :func:`lm_spec_commit` applies
+    once the accept rule picks each row's accepted prefix.  Returns
+    (logits (B, C, V), cache)."""
+    B, C = tokens.shape
+    index = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (B,))
+    pos = index[:, None] + jnp.arange(C)[None, :]              # (B, C)
+    x = params["embed"][tokens]
+    if cfg.position == "absolute":
+        x = x + params["pos_embed"][pos]
+    positions = (jnp.broadcast_to(pos[None], (3, B, C))
+                 if cfg.position == "mrope" else pos)
+    x = maybe_shard(x, P(("pod", "data"), None, None))
+    n_super = num_superblocks(params)
+    if n_super > 0:
+        def scan_fn(x, sb_and_cache):
+            sb, cache_sb = sb_and_cache
+            for i in range(cfg.pattern_period):
+                x, new_c = _verify_layer(sb[f"layer{i}"],
+                                         cache_sb[f"layer{i}"], cfg, i, x,
+                                         index, positions, block_table,
+                                         write_mask)
+                cache_sb[f"layer{i}"] = new_c
+            return x, cache_sb
+        x, cache = jax.lax.scan(scan_fn, x, (params["blocks"], cache))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap(x @ head, cfg.final_logit_softcap)
+    logits = maybe_shard(logits, P(("pod", "data"), None, "model"))
+    return logits, cache
+
+
+def lm_spec_commit(cache, index, acc):
+    """Resolve a verify forward's deferred window-ring advances: commit each
+    row's ``acc`` accepted tokens (``attn.spec_ring_commit``) and drop the
+    ``pending`` entries.  Paged pool leaves pass through — rejected
+    positions there live beyond the rewound cursor (never readable, always
+    rewritten first), so rollback costs them nothing."""
+    out = {}
+    for lname, lc in cache.items():
+        if isinstance(lc, dict) and "pending" in lc:
+            k, v = attn.spec_ring_commit(lc["k"], lc["v"], lc["pending"]["k"],
+                                         lc["pending"]["v"], index, acc)
+            out[lname] = {"k": k, "v": v}
+        else:
+            out[lname] = lc
+    return out
+
+
 def _decode_layer(lp, cache_l, cfg: ModelConfig, i: int, x, index, positions,
                   block_table=None, write_mask=None):
     kind = cfg.layer_kind(i)

@@ -138,6 +138,32 @@ class KVBlockPool:
         self.table[row, :] = self.trash
         self.version += 1
 
+    def truncate_row(self, row: int, num_tokens: int) -> bool:
+        """Speculative-decoding rollback: release row's pages past its first
+        ``num_tokens`` slots (the rewound cursor), keeping the commitment.
+
+        The inverse of :meth:`advance` — pages holding only rejected draft
+        tokens return to the free list and their table entries point back at
+        the trash page, so rollback is O(pages released) bookkeeping and no
+        page data ever moves.  Stale K/V on a released page is harmless: a
+        page is always re-advanced (and its slots rewritten) before any slot
+        on it becomes readable again.  Returns True iff the table changed.
+        Idempotent for ``num_tokens`` at/above the allocated frontier."""
+        if row not in self._commit:
+            raise ValueError(f"row {row} not admitted")
+        if num_tokens < 0:
+            raise ValueError(f"truncate_row({row}, {num_tokens})")
+        keep = -(-num_tokens // self.block_size)
+        pages = self._rows[row]
+        if keep >= len(pages):
+            return False
+        dropped = pages[keep:]
+        del pages[keep:]
+        self._free.extend(reversed(dropped))
+        self.table[row, keep:] = self.trash
+        self.version += 1
+        return True
+
     # -- invariants (exercised by the hypothesis fuzz test) -----------------
 
     def check_invariants(self) -> None:

@@ -40,6 +40,23 @@ discipline.  The contract:
     TPU, exact gather elsewhere), and a finished row's pages return to
     the pool immediately (``free_slot``).  Greedy tokens stay
     byte-identical to contiguous solo generation.
+  * ``spec_decode=True`` (requires ``paged=True``) runs SELF-SPECULATIVE
+    decoding on the continuous path: a depth-truncated draft — the first
+    ``draft_depth`` layers with the shared embedding / final norm / tied
+    LM head (``core.expansion.truncate_params``), or an externally
+    restored shallower checkpoint via ``draft_params`` — proposes
+    ``gamma`` tokens per iteration against its own contiguous cache, and
+    the target scores all γ+1 positions in ONE ``lm_verify`` forward
+    through the block table.  Zero/one-layer progressive training makes
+    every depth prefix a trained model (expansion appends new blocks
+    after the source stack), so the draft needs no training of its own
+    and — for a function-preserving ``copying_zeroL`` expansion —
+    accepts at rate 1.0 by construction.  Rollback of rejected proposals is per-row
+    cursor rewind + ``KVBlockPool.truncate_row`` page release (pages
+    never move); draft window rings restore from a per-round snapshot.
+    Greedy spec-decoded streams are byte-identical to non-speculative
+    greedy decode.  Attention-only archs (dense / sliding-window):
+    recurrent mamba/rwkv states have no per-prefix rollback yet.
 """
 from __future__ import annotations
 
@@ -88,6 +105,10 @@ class ContinuousState:
     pool: object = None       # KVBlockPool (host) — paged engines only
     block_table: object = None  # (B, max_blocks) int32 device copy
     table_version: int = -1   # pool.version the device table reflects
+    table_host: object = None   # host mirror of the uploaded device table
+    draft_cache: object = None  # draft model's contiguous cache (spec only);
+                                # shares index/active with the target (both
+                                # count the same cached prefix)
 
     @property
     def batch(self) -> int:
@@ -159,7 +180,9 @@ class ServeEngine:
                  layout: str = "tp", moe_fsdp: str = "auto",
                  paged: bool = False, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 prefill_cache_size: int = 8):
+                 prefill_cache_size: int = 8,
+                 spec_decode: bool = False, gamma: int = 4,
+                 draft_depth: Optional[int] = None, draft_params=None):
         # Same RNG-layout guard as the train engine: sampled bits must not
         # depend on the mesh the categorical runs under.
         if "JAX_THREEFRY_PARTITIONABLE" not in os.environ:
@@ -193,6 +216,66 @@ class ServeEngine:
         self._chunk_built = {}        # (C, final?, sample?, NB, B) -> step
         self._prefill_lru = collections.OrderedDict()  # (P, sample?) -> step
         self._dev_scalars = {}        # (dtype, value) -> replicated device put
+        self.spec_decode = spec_decode
+        self.gamma = gamma
+        if spec_decode:
+            self._init_spec(draft_depth, draft_params, fsdp=fsdp,
+                            moe_fsdp=moe_fsdp)
+
+    def _init_spec(self, draft_depth, draft_params, fsdp, moe_fsdp):
+        """Resolve the draft model of self-speculative decoding.
+
+        The default draft is the depth-TRUNCATED target: embed/final-norm/
+        tied-head leaves are the target's own device arrays (shared, no
+        copy); the block stack's shallow prefix is materialized once on
+        device (slicing a committed array copies — the draft's only
+        parameter-memory cost, a draft_depth/num_layers fraction of the
+        blocks).  An external ``draft_params`` (e.g. a pre-expansion
+        checkpoint restored at its manifest depth) overrides truncation."""
+        from repro.core import expansion as exp
+        cfg = self.cfg
+        if not self.paged:
+            raise ValueError("spec_decode requires paged=True (rollback of "
+                             "rejected drafts is block-table cursor rewind)")
+        if self.gamma < 1:
+            raise ValueError(f"gamma {self.gamma} < 1")
+        kinds = {cfg.layer_kind(i) for i in range(cfg.pattern_period)}
+        if kinds - {"attn"}:
+            raise NotImplementedError(
+                f"{cfg.name}: spec_decode covers attention-only archs; "
+                f"recurrent {sorted(kinds - {'attn'})} states have no "
+                "per-prefix rollback yet")
+        windows = [cfg.layer_window(i) for i in range(cfg.pattern_period)]
+        if any(0 < w < self.gamma + 1 for w in windows):
+            raise ValueError(
+                f"gamma {self.gamma} + 1 draft writes exceed sliding window "
+                f"{min(w for w in windows if w > 0)}: a speculation round "
+                "may not overwrite a draft ring slot twice")
+        if draft_params is not None:
+            from repro.models.transformer import num_superblocks
+            depth = num_superblocks(draft_params) * cfg.pattern_period
+            self.draft_cfg = cfg.with_depth(depth)
+            d_struct = jax.eval_shape(lambda t: t, draft_params)
+            self.draft_param_shardings = shd.params_shardings(
+                d_struct, self.mesh, fsdp=fsdp, moe_fsdp=moe_fsdp,
+                layout=self.layout)
+            self.draft_params = jax.device_put(draft_params,
+                                               self.draft_param_shardings)
+        else:
+            if draft_depth is None:
+                raise ValueError("spec_decode needs draft_depth (layers to "
+                                 "truncate the target to) or draft_params")
+            self.draft_cfg = cfg.with_depth(draft_depth)
+            self.draft_params = exp.truncate_params(self.params, cfg,
+                                                    draft_depth)
+            d_struct = jax.eval_shape(lambda t: t, self.draft_params)
+            self.draft_param_shardings = shd.params_shardings(
+                d_struct, self.mesh, fsdp=fsdp, moe_fsdp=moe_fsdp,
+                layout=self.layout)
+        self.draft_api = registry.get_model(self.draft_cfg)
+        self._spec_built = {}         # (B, sample?, NB) -> SpecSteps
+        self._draft_prefill_lru = collections.OrderedDict()  # P -> step
+        self._draft_sh1 = None        # lazily resolved B=1 draft shardings
 
     def _dev_scalar(self, value, dtype):
         """Replicated device scalar, uploaded once per distinct value: the
@@ -438,6 +521,160 @@ class ServeEngine:
                 shardings=sh, carry_shardings=carry_sh)
         return self._chunk_built[key]
 
+    # -- self-speculative decoding ------------------------------------------
+
+    def _spec_steps(self, batch: int, temperature: float, num_blocks: int):
+        """Compiled speculation bundle for one (batch, mode, pool) size:
+        (draft_loop, verify, rollback, scatter, init_cache, init_row_cache)
+        — see ``steps_lib.make_draft_loop_step`` / ``make_verify_step`` /
+        ``make_draft_rollback_step``."""
+        key = (batch, temperature > 0, num_blocks)
+        if key in self._spec_built:
+            return self._spec_built[key]
+        sample = temperature > 0
+        dcfg = self.draft_cfg
+        _, _, sh, _, _, _ = self._paged_steps(batch, temperature, num_blocks)
+        verify = steps_lib.make_verify_step(self.cfg, self.gamma,
+                                            sample=sample, shardings=sh)
+        init_cache_fn = functools.partial(
+            self.draft_api.init_cache, cfg=dcfg, batch_size=batch,
+            max_len=self.max_len, dtype=self.cache_dtype)
+        init_row_fn = functools.partial(
+            self.draft_api.init_cache, cfg=dcfg, batch_size=1,
+            max_len=self.max_len, dtype=self.cache_dtype)
+        cache_struct = jax.eval_shape(init_cache_fn, self.draft_params)
+        row_struct = jax.eval_shape(init_row_fn, self.draft_params)
+        tok_struct = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        logit_struct = jax.ShapeDtypeStruct((batch, 1, self.cfg.vocab_size),
+                                            jnp.float32)
+        dsh = steps_lib.ServeShardings(
+            mesh=self.mesh,
+            params=self.draft_param_shardings,
+            cache=shd.cache_shardings(cache_struct, self.mesh),
+            tokens=shd.batch_shardings(tok_struct, self.mesh,
+                                       layout=self.layout),
+            logits=shd.batch_shardings(logit_struct, self.mesh,
+                                       layout=self.layout),
+            replicated=self._replicated)
+        row_sh = shd.cache_shardings(row_struct, self.mesh)
+        # Draft sliding-window rings need a pre-round snapshot (an output
+        # of the fused draft loop) + post-accept restore; full-attention
+        # draft leaves roll back by cursor alone.
+        ring_layers = tuple(f"layer{i}" for i in range(dcfg.pattern_period)
+                            if dcfg.layer_window(i) > 0) \
+            if cache_struct else ()
+        draft = steps_lib.make_draft_loop_step(
+            dcfg, self.gamma, sample=sample, shardings=dsh,
+            ring_layers=ring_layers)
+        scatter = steps_lib.make_row_scatter_step(
+            shardings=dsh, row_cache_shardings=row_sh)
+        init_cache = jax.jit(init_cache_fn, out_shardings=dsh.cache)
+        init_row = jax.jit(init_row_fn, out_shardings=row_sh)
+        rollback = None
+        if ring_layers:
+            ring_sh = {ln: dsh.cache[ln] for ln in ring_layers}
+            rollback = steps_lib.make_draft_rollback_step(
+                dcfg, self.gamma, shardings=dsh, ring_shardings=ring_sh)
+        bundle = (draft, verify, rollback, scatter, init_cache, init_row,
+                  dsh, row_sh)
+        self._spec_built[key] = bundle
+        return bundle
+
+    def _draft_prefill1(self, length: int):
+        """B=1 draft-prefill executable per exact prompt length (greedy —
+        the sampled token is discarded; only the cache fill matters),
+        LRU-bounded like :meth:`_prefill1`."""
+        if length in self._draft_prefill_lru:
+            self._draft_prefill_lru.move_to_end(length)
+            return self._draft_prefill_lru[length]
+        if self._draft_sh1 is None:
+            row_fn = functools.partial(
+                self.draft_api.init_cache, cfg=self.draft_cfg, batch_size=1,
+                max_len=self.max_len, dtype=self.cache_dtype)
+            row_struct = jax.eval_shape(row_fn, self.draft_params)
+            tok_struct = jax.ShapeDtypeStruct((1, 1), jnp.int32)
+            logit_struct = jax.ShapeDtypeStruct(
+                (1, 1, self.cfg.vocab_size), jnp.float32)
+            self._draft_sh1 = steps_lib.ServeShardings(
+                mesh=self.mesh, params=self.draft_param_shardings,
+                cache=shd.cache_shardings(row_struct, self.mesh),
+                tokens=shd.batch_shardings(tok_struct, self.mesh,
+                                           layout=self.layout),
+                logits=shd.batch_shardings(logit_struct, self.mesh,
+                                           layout=self.layout),
+                replicated=self._replicated)
+        fn = steps_lib.make_prefill_step(self.draft_cfg, sample=False,
+                                         shardings=self._draft_sh1)
+        self._draft_prefill_lru[length] = fn
+        while len(self._draft_prefill_lru) > self.prefill_cache_size:
+            self._draft_prefill_lru.popitem(last=False)
+        return fn
+
+    def _admit_draft(self, state: ContinuousState, row: int, prompt,
+                     temperature: float) -> ContinuousState:
+        """Speculative half of a paged admission: prefill the DRAFT's cache
+        for the prompt (one B=1 forward at the exact length — the draft is
+        shallow, so this costs a fraction of one target chunk) and scatter
+        the row into the live draft cache.  The draft's sampled token is
+        discarded: the target's chunked prefill owns the first token."""
+        if not jax.tree.leaves(state.draft_cache):
+            return state            # zero-layer draft: nothing to cache
+        _, _, _, scatter, _, init_row, _, _ = self._spec_steps(
+            state.batch, temperature, state.pool.num_blocks)
+        prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+        prefill1 = self._draft_prefill1(prompt.shape[1])
+        with self.activation_context():
+            row_cache = init_row(self.draft_params)
+            toks = jax.device_put(prompt, self._draft_sh1.tokens)
+            _, _, row_cache, _, _ = prefill1(self.draft_params, toks,
+                                             row_cache, state.key)
+            dcache = scatter(state.draft_cache, row_cache, np.int32(row))
+        return dataclasses.replace(state, draft_cache=dcache)
+
+    def decode_spec(self, state: ContinuousState, temperature: float = 0.0,
+                    eos_id: int = -1):
+        """One SPECULATION round over all slots: γ masked draft steps
+        propose, ONE target verify forward scores/accepts/commits, draft
+        rings roll back to the accepted prefix.
+
+        Returns ``(state, out_tokens (B, γ+1) device, acc (B,) device)`` —
+        row b emitted ``acc[b]`` tokens, ``out_tokens[b, :acc[b]]``
+        (inactive rows emit 0 tokens).  The caller rewinds its host
+        cursors by ``acc`` and releases pages past the new cursor
+        (``state.pool.truncate_row``); the device-side rollback already
+        happened in here (verify ring commit + draft ring restore — the
+        paged pool needs none)."""
+        state = self._sync_table(state)
+        draft, verify, rollback, _, _, _, _, _ = self._spec_steps(
+            state.batch, temperature, state.pool.num_blocks)
+        temp = (self._dev_scalar(temperature, np.float32),
+                ) if temperature > 0 else ()
+        eos = self._dev_scalar(eos_id, np.int32)
+        with self.activation_context():
+            # ONE fused dispatch runs all γ+1 draft steps (γ proposals plus
+            # the cache-fill step for the last proposal — a fully-accepted
+            # round leaves no hole at position cursor+γ) and snapshots the
+            # draft's window rings for the post-accept restore.
+            if temperature > 0:
+                vt, probs, dcache, snap, key = draft(
+                    self.draft_params, state.tokens, state.draft_cache,
+                    state.index, state.active, *temp, state.key)
+                extra = (probs,) + temp
+            else:
+                vt, dcache, snap, key = draft(
+                    self.draft_params, state.tokens, state.draft_cache,
+                    state.index, state.active, state.key)
+                extra = ()
+            out, acc, nxt, cache, index, active, key = verify(
+                self.params, vt, state.cache, state.index, state.active,
+                state.limit, state.block_table, eos, *extra, key)
+            if rollback is not None:
+                dcache = rollback(dcache, snap, state.index, acc)
+        state = dataclasses.replace(state, tokens=nxt, cache=cache,
+                                    draft_cache=dcache, index=index,
+                                    active=active, key=key)
+        return state, out, acc
+
     def continuous_state(self, batch: int, temperature: float = 0.0,
                          seed: int = 0,
                          num_blocks: Optional[int] = None) -> ContinuousState:
@@ -456,8 +693,14 @@ class ServeEngine:
         else:
             _, _, sh, _, init_cache, _ = self._cont_steps(batch, temperature)
             pool = None
+        draft_cache = None
+        if self.spec_decode:
+            _, _, _, _, init_draft, _, _, _ = self._spec_steps(
+                batch, temperature, pool.num_blocks)
         with self.activation_context():
             cache = init_cache(self.params)
+            if self.spec_decode:
+                draft_cache = init_draft(self.draft_params)
             state = ContinuousState(
                 tokens=jax.device_put(np.zeros((batch, 1), np.int32),
                                       sh.tokens),
@@ -466,7 +709,8 @@ class ServeEngine:
                 active=jax.device_put(np.zeros((batch,), bool), r),
                 limit=jax.device_put(np.zeros((batch,), np.int32), r),
                 key=jax.device_put(jax.random.PRNGKey(seed), r),
-                pool=pool)
+                pool=pool,
+                draft_cache=draft_cache)
         return self._sync_table(state)
 
     def prefill_request(self, state: ContinuousState, prompt,
@@ -542,13 +786,25 @@ class ServeEngine:
     # -- paged request lifecycle (chunked prefill through the pool) ---------
 
     def _sync_table(self, state: ContinuousState) -> ContinuousState:
-        """Re-upload the block table iff the host pool changed it."""
+        """Re-upload the block table iff the host pool changed it.
+
+        The version check is cheap but pessimistic: a speculative
+        rollback (``truncate_row``) followed by the next round's
+        re-advance hands the SAME pages back (LIFO free list), bumping
+        the version twice while leaving the table bytes unchanged — so a
+        changed version additionally byte-compares against the copy last
+        uploaded and skips the device transfer when nothing moved."""
         if state.pool is None or state.table_version == state.pool.version:
             return state
-        tbl = jax.device_put(np.ascontiguousarray(state.pool.table),
-                             self._replicated)
+        tbl_host = np.ascontiguousarray(state.pool.table)
+        if state.table_host is not None \
+                and np.array_equal(tbl_host, state.table_host):
+            return dataclasses.replace(state,
+                                       table_version=state.pool.version)
+        tbl = jax.device_put(tbl_host, self._replicated)
         return dataclasses.replace(state, block_table=tbl,
-                                   table_version=state.pool.version)
+                                   table_version=state.pool.version,
+                                   table_host=tbl_host.copy())
 
     def begin_prefill(self, state: ContinuousState, row: int, prompt,
                       max_new_tokens: int, chunk_len: Optional[int] = None,
@@ -622,8 +878,11 @@ class ServeEngine:
                 state.cache, state.tokens, state.index, state.active,
                 state.limit, job.carry, first_token, np.int32(P),
                 np.int32(P + job.max_new_tokens - 1), np.int32(job.row))
-        return dataclasses.replace(state, cache=cache, tokens=tokens,
-                                   index=index, active=active, limit=limit)
+        state = dataclasses.replace(state, cache=cache, tokens=tokens,
+                                    index=index, active=active, limit=limit)
+        if self.spec_decode:
+            state = self._admit_draft(state, job.row, job.prompt, temperature)
+        return state
 
     def free_slot(self, state: ContinuousState, row: int) -> ContinuousState:
         """Free-on-EOS: return the finished row's pages to the pool

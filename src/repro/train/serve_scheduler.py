@@ -31,6 +31,28 @@ late; the extra iteration is an exact no-op for the terminated row (its
 active flag flipped on device), so every request's token stream is
 unchanged — only slot reclaim shifts by one iteration.
 
+Speculative decoding (``ServeEngine(spec_decode=True)``): every iteration
+is one SPECULATION ROUND — a fused draft loop + one multi-token verify —
+emitting 1..γ+1 tokens per live row.  Rollback of rejected proposals is
+pure host bookkeeping: the fetched per-row accepted length rewinds the
+cursor mirror and ``KVBlockPool.truncate_row`` releases pages past it —
+no page data moves.  Spec rounds fetch every iteration (``overlap`` does
+not apply): the next round's page allocation depends on the accepted
+lengths, and overlapping would observe each termination one ROUND — γ+1
+tokens of verify work — late, which measures net-negative; the fused
+draft loop and multi-token verify already amortize dispatch overhead
+over γ+1 tokens.  Per-request accepted-length and aggregate
+acceptance-rate telemetry lands in ``RequestResult.spec_rounds`` /
+``spec_stats()``.
+
+Admission aging (``admission_age_s``): paged admission is first-fit over
+the arrived queue, so under sustained small-request load a large page
+commitment can wait unboundedly.  Once the OLDEST arrived request has
+waited longer than ``admission_age_s``, later arrivals stop jumping it —
+admission blocks until the head's worst-case pages fit (commitments drain
+monotonically as live requests finish, so the head is then guaranteed to
+admit).  None (default) keeps pure first-fit.
+
 Greedy decoding is deterministic per request: a request's token stream is
 byte-identical to running it alone through ``ServeEngine.generate``
 (per-row math is independent of co-scheduled rows).  Temperature sampling
@@ -45,6 +67,7 @@ import time
 from collections import deque
 from typing import Callable, List, Optional, Sequence
 
+import jax
 import numpy as np
 
 from repro.train.serve_engine import ServeEngine
@@ -71,6 +94,7 @@ class RequestResult:
     arrival_s: float
     admitted_s: float                 # prefill completion (= first token)
     finished_s: float
+    spec_rounds: int = 0              # speculation rounds this request saw
 
     @property
     def tokens(self) -> np.ndarray:
@@ -80,6 +104,14 @@ class RequestResult:
     def ttft_s(self) -> float:
         """Time to first token: arrival -> first sampled token (prefill)."""
         return self.admitted_s - self.arrival_s
+
+    @property
+    def mean_accepted_len(self) -> float:
+        """Mean tokens emitted per speculation round (1 + accepted drafts;
+        the prefill token is not round-emitted).  0.0 when not spec-decoded."""
+        if not self.spec_rounds:
+            return 0.0
+        return max(len(self.new_tokens) - 1, 0) / self.spec_rounds
 
 
 class ContinuousScheduler:
@@ -99,7 +131,8 @@ class ContinuousScheduler:
                  time_fn: Callable[[], float] = time.perf_counter,
                  sleep_fn: Callable[[float], None] = time.sleep,
                  poll_s: float = 1e-3, chunk_len: Optional[int] = None,
-                 overlap: bool = True, num_blocks: Optional[int] = None):
+                 overlap: bool = True, num_blocks: Optional[int] = None,
+                 admission_age_s: Optional[float] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch {max_batch} < 1")
         self.engine = engine
@@ -113,7 +146,23 @@ class ContinuousScheduler:
         self.chunk_len = chunk_len
         self.overlap = overlap
         self.num_blocks = num_blocks
+        self.admission_age_s = admission_age_s
         self.peak_concurrency = 0              # max in-flight (live+prefill)
+        self.spec_rounds = 0                   # speculation telemetry
+        self.spec_proposed = 0                 # draft tokens proposed
+        self.spec_accepted = 0                 # draft tokens accepted
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted / proposed draft tokens over the last run (0.0 when
+        not spec-decoding)."""
+        return self.spec_accepted / max(self.spec_proposed, 1)
+
+    def spec_stats(self) -> dict:
+        return {"spec_rounds": self.spec_rounds,
+                "spec_proposed": self.spec_proposed,
+                "spec_accepted": self.spec_accepted,
+                "acceptance_rate": self.acceptance_rate}
 
     def warmup(self, requests: Sequence[Request]):
         """Compile every executable a serving run will need — the masked
@@ -154,7 +203,10 @@ class ContinuousScheduler:
                         f"request {r.uid}: needs {need} pages, pool holds "
                         f"{min(cap, engine.max_blocks)} per row")
 
+        spec = paged and engine.spec_decode
         self.peak_concurrency = 0          # per-run (warmup doesn't count)
+        self.spec_rounds = self.spec_proposed = self.spec_accepted = 0
+        rounds_by_uid: dict = {}           # uid -> speculation rounds seen
         pending = deque(sorted(reqs, key=lambda r: r.arrival_s))
         state = engine.continuous_state(
             self.max_batch, temperature=self.temperature, seed=self.seed,
@@ -181,7 +233,8 @@ class ContinuousScheduler:
                 uid=req.uid, prompt=req.prompt,
                 new_tokens=np.asarray(tokens, np.int32),
                 finish_reason=reason, slot=slot, arrival_s=req.arrival_s,
-                admitted_s=t_first, finished_s=now)
+                admitted_s=t_first, finished_s=now,
+                spec_rounds=rounds_by_uid.pop(req.uid, 0))
             done[req.uid] = res
             if on_finish is not None:
                 on_finish(res)
@@ -190,15 +243,35 @@ class ContinuousScheduler:
             """Apply host bookkeeping for dispatched steps beyond `keep`."""
             nonlocal state
             while len(fetch_q) > keep:
-                toks_d, act_d, rows = fetch_q.popleft()
-                toks = np.asarray(toks_d)[:, 0]      # blocks on the device
-                act = np.asarray(act_d)
+                entry = fetch_q.popleft()
+                rows = entry[2]
+                # one transfer for the whole step's host view (blocks)
+                fetched = jax.device_get(entry[:2] + entry[3:])
+                toks, act = np.asarray(fetched[0]), np.asarray(fetched[1])
+                acc = np.asarray(fetched[2]) if len(fetched) > 2 else None
                 now = self.time_fn() - t0
                 for row, uid in rows:
                     if row not in live or live[row][0].uid != uid:
                         continue     # slot re-admitted since this dispatch
                     req, out, t_first = live[row]
-                    out.append(int(toks[row]))
+                    if acc is None:  # plain decode (cursor mirrored at
+                        out.append(int(toks[row, 0]))  # dispatch time)
+                    else:            # speculation round: 1..γ+1 tokens
+                        a = int(acc[row])
+                        out.extend(int(t) for t in toks[row, :a])
+                        # Proposals the accept rule could actually have
+                        # taken: the row's limit caps emissions at
+                        # limit - cursor (bonus included), so drafts beyond
+                        # that were never in play and don't count against
+                        # the acceptance rate.
+                        limit_row = (len(req.prompt) + req.max_new_tokens
+                                     - 1)
+                        self.spec_proposed += max(
+                            min(engine.gamma, limit_row - cursors[row] - 1),
+                            0)
+                        self.spec_accepted += max(a - 1, 0)
+                        rounds_by_uid[uid] = rounds_by_uid.get(uid, 0) + 1
+                        cursors[row] += a
                     if not act[row]:   # terminated: stream out, free slot
                         finish(req, out, row, t_first, now)
                         del live[row]
@@ -206,6 +279,11 @@ class ContinuousScheduler:
                         if paged:
                             state = engine.free_slot(state, row)
                         free.append(row)
+                    elif acc is not None:
+                        # Rollback: release pages past the accepted cursor
+                        # (the pre-round advance backed the full γ+1
+                        # speculation; rejected tokens' pages go home).
+                        state.pool.truncate_row(row, cursors[row])
 
         while pending or live or prefilling or fetch_q:
             now = self.time_fn() - t0
@@ -214,8 +292,9 @@ class ContinuousScheduler:
             # queue: a big request whose worst-case pages don't fit yet must
             # not idle pages a later short request could use (head-of-line
             # blocking).  The blocked request admits as soon as commitments
-            # drain to its need — under sustained overload a large request
-            # can wait long (no aging/reservation yet; noted in ROADMAP).
+            # drain to its need; ``admission_age_s`` bounds how long later
+            # arrivals may keep jumping it (aging: past the threshold,
+            # admission blocks until the oldest request fits).
             skip = 0
             while free and pending and skip < len(pending) \
                     and pending[skip].arrival_s <= now:
@@ -224,6 +303,10 @@ class ContinuousScheduler:
                     need = state.pool.blocks_needed(len(req.prompt),
                                                     req.max_new_tokens)
                     if not state.pool.can_admit(need):
+                        if skip == 0 and self.admission_age_s is not None \
+                                and now - req.arrival_s \
+                                > self.admission_age_s:
+                            break  # aged head: no one admits past it
                         skip += 1      # try later arrivals that fit
                         continue
                     del pending[skip]
@@ -279,6 +362,30 @@ class ContinuousScheduler:
                         self.sleep_fn(min(wait, self.poll_s))
                 continue
             # ---- one masked decode iteration across all slots -------------
+            if spec:
+                # One SPECULATION ROUND: the verify writes positions
+                # cursor..cursor+γ (clamped at the row's limit), so back
+                # them all before dispatch — rejected tokens' pages are
+                # released again at fetch (truncate_row rollback).
+                g1 = engine.gamma + 1
+                for row in live:
+                    req = live[row][0]
+                    limit = len(req.prompt) + req.max_new_tokens - 1
+                    state.pool.advance(row, min(cursors[row] + g1, limit))
+                state, out_d, acc_d = engine.decode_spec(
+                    state, temperature=self.temperature, eos_id=self.eos_id)
+                self.spec_rounds += 1
+                fetch_q.append((out_d, state.active,
+                                tuple((row, live[row][0].uid)
+                                      for row in live), acc_d))
+                # Fetch every round: the next round's page allocation
+                # depends on this one's accepted lengths, and overlapping
+                # would observe each termination one ROUND (γ+1 tokens of
+                # verify work) late — measured net-negative even on long
+                # generations.  The fused draft loop + verify already
+                # amortize dispatch overhead over γ+1 tokens.
+                drain(0)
+                continue
             if paged:
                 # alloc-on-advance: back the slot each live row writes next,
                 # plus one page of lookahead — admission is commitment-

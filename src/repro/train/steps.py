@@ -348,6 +348,296 @@ def make_serve_decode_step(cfg: ModelConfig, sample: bool = False,
                    donate_argnums=donate)
 
 
+# ---------------------------------------------------------------------------
+# Self-speculative decoding (depth-truncated draft + multi-token verify)
+# ---------------------------------------------------------------------------
+
+
+def make_draft_loop_step(cfg: ModelConfig, gamma: int, sample: bool = False,
+                         shardings: Optional[ServeShardings] = None,
+                         ring_layers=()) -> Callable:
+    """The WHOLE draft loop of one speculation round in ONE executable:
+    γ+1 masked draft decode steps under ``lax.scan``.
+
+    Greedy:
+        (draft_params, token(B,1), cache, index(B,), active(B,), key) ->
+            (verify_tokens(B, γ+1), cache, ring_snapshot, key)
+    Sampling additionally returns the draft's post-temperature proposal
+    distributions (the verify step's accept-ratio denominator):
+        (draft_params, token, cache, index, active, temp, key) ->
+            (verify_tokens, probs(B, γ, V), cache, ring_snapshot, key)
+
+    ``verify_tokens`` row b is [current token, d_1 .. d_γ] — the scan
+    collects each step's INPUT token, so the γ+1-th step's proposal is
+    naturally discarded while its cache write still lands (no hole at
+    position cursor+γ after a fully-accepted round).  Fusing the loop
+    matters on a mesh: a speculation round costs TWO dispatches (draft
+    loop + verify; +1 ring rollback on window archs) instead of γ+3, which
+    is what keeps speculative decoding ahead of plain decode when
+    per-dispatch overhead rivals per-layer compute.
+
+    Like the masked serve decode step, inactive rows are exact no-ops —
+    but there is NO eos/limit termination: the draft proposes
+    unconditionally and the verify step owns termination.
+    ``ring_snapshot`` is the pre-round state of the ``ring_layers`` ring
+    buffers ({} when none), consumed by ``make_draft_rollback_step``."""
+    api = registry.get_model(cfg)
+    if gamma < 1:
+        raise ValueError(f"gamma {gamma} < 1")
+
+    def run(params, tokens, cache, index, active, temp, key):
+        snap = {ln: {k: cache[ln][k] for k in ("k", "v")}
+                for ln in ring_layers}
+
+        def body(carry, _):
+            tok, cache, idx, key = carry
+            logits, new_cache = api.decode_step(params, cfg, tok, cache, idx)
+            last = logits[:, -1]
+            nxt, key = _sample(last, temp, key, sample)
+            nxt = jnp.where(active, nxt, 0).astype(jnp.int32)
+
+            def freeze(path, new, old):
+                if _is_paged_leaf(path):
+                    return new
+                keep = active.reshape((1, active.shape[0])
+                                      + (1,) * (new.ndim - 2))
+                return jnp.where(keep, new, old)
+            cache = jax.tree_util.tree_map_with_path(freeze, new_cache,
+                                                     cache)
+            ys = (tok[:, 0],)
+            if sample:
+                ys += (jax.nn.softmax(last.astype(jnp.float32) / temp,
+                                      axis=-1),)
+            return (nxt[:, None], cache, idx + active.astype(idx.dtype),
+                    key), ys
+
+        (_, cache, _, key), ys = jax.lax.scan(
+            body, (tokens, cache, index, key), None, length=gamma + 1)
+        vt = jnp.moveaxis(ys[0], 0, 1)                  # (B, γ+1) inputs
+        if sample:
+            probs = jnp.moveaxis(ys[1][:gamma], 0, 1)   # (B, γ, V)
+            return vt, probs, cache, snap, key
+        return vt, cache, snap, key
+
+    if sample:
+        fn = run
+    else:
+        def fn(params, tokens, cache, index, active, key):
+            return run(params, tokens, cache, index, active, None, key)
+
+    donate = (2,)
+    if shardings is None:
+        return jax.jit(fn, donate_argnums=donate)
+    r = shardings.replicated
+    ring_sh = {ln: shardings.cache[ln] for ln in ring_layers}
+    ins = (shardings.params, shardings.tokens, shardings.cache, r, r) \
+        + ((r,) if sample else ()) + (r,)
+    outs = (shardings.tokens,) + ((shardings.logits,) if sample else ()) \
+        + (shardings.cache, ring_sh, r)
+    return jax.jit(fn, in_shardings=ins, out_shardings=outs,
+                   donate_argnums=donate)
+
+
+def make_verify_step(cfg: ModelConfig, gamma: int, sample: bool = False,
+                     shardings: Optional[ServeShardings] = None) -> Callable:
+    """ONE multi-token target forward that scores, accepts, and commits a
+    whole speculation round — the hot step of self-speculative decoding.
+
+    Greedy:
+        (params, tokens(B,C), cache, index(B,), active(B,), limit(B,),
+         table(B,NB), eos, key) ->
+            (out_tokens(B,C), acc(B,), next_token(B,1), cache,
+             new_index, new_active, key)
+    Sampling additionally takes the draft proposal distributions and the
+    temperature:
+        (..., table, eos, draft_probs(B,γ,V), temp, key) -> (same outputs)
+
+    ``tokens`` is each row's [current input token, γ draft proposals];
+    ``C = γ+1``.  The forward (``ModelApi.verify``) writes all C K/V
+    entries through the block table at per-row traced offsets (positions
+    at/after a row's limit and all inactive rows' writes land in the trash
+    page) and returns logits for every position.
+
+    Accept rule — greedy: target tokens ``g = argmax(logits)``; a matched
+    draft prefix of length n means positions 0..n saw exactly the
+    sequential greedy prefix, so the emitted tokens are literally
+    ``g[:, :n+1]`` (n accepted drafts + the bonus token) and the stream is
+    byte-identical to non-speculative greedy decode.  Sampling: standard
+    speculative sampling — draft token j accepts with probability
+    ``min(1, p_t(d_j)/p_d(d_j))``; the first rejection resamples from the
+    normalized residual ``max(p_t - p_d, 0)``, full acceptance samples the
+    bonus from ``p_t[γ]`` — the emitted distribution equals sequential
+    sampling's.
+
+    The accepted count is then clamped per row exactly as sequential
+    masked decode would terminate: at the first emitted ``eos`` and at the
+    row's ``limit`` cursor; inactive rows emit nothing (``acc == 0``).
+    Before returning, the verify's deferred window-ring advances are
+    committed for each row's accepted prefix (``ModelApi.spec_commit``) —
+    the paged pool needs no device-side rollback at all (rejected K/V sits
+    beyond the rewound cursor; the host just releases its pages via
+    ``KVBlockPool.truncate_row``)."""
+    api = registry.get_model(cfg)
+    if api.verify is None:
+        raise NotImplementedError(f"{cfg.name}: no verify path for this arch")
+    if gamma < 1:
+        raise ValueError(f"gamma {gamma} < 1")
+    C = gamma + 1
+
+    def body(params, tokens, cache, index, active, limit, table, eos,
+             draft_probs, temp, key):
+        B = tokens.shape[0]
+        pos = index[:, None] + jnp.arange(C)[None, :]
+        wmask = active[:, None] & (pos < limit[:, None])
+        logits, new_cache = api.verify(params, cfg, tokens, cache, index,
+                                       table, wmask)
+        idx_c = jnp.arange(C)[None, :]
+        if not sample:
+            g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            match = (tokens[:, 1:] == g[:, :gamma]).astype(jnp.int32)
+            n = jnp.cumprod(match, axis=1).sum(axis=1)
+            emitted = g
+        else:
+            p_t = jax.nn.softmax(logits.astype(jnp.float32) / temp, axis=-1)
+            d = tokens[:, 1:]                                  # (B, γ)
+            pt_d = jnp.take_along_axis(p_t[:, :gamma], d[..., None],
+                                       axis=-1)[..., 0]
+            pd_d = jnp.take_along_axis(draft_probs, d[..., None],
+                                       axis=-1)[..., 0]
+            key, ku, kr = jax.random.split(key, 3)
+            u = jax.random.uniform(ku, (B, gamma))
+            accept = (u * pd_d < pt_d).astype(jnp.int32)
+            n = jnp.cumprod(accept, axis=1).sum(axis=1)
+            # Resample position n: residual for a rejection, p_t[γ] after
+            # full acceptance (draft_probs padded with zeros there, so the
+            # residual degenerates to p_t[γ] by the same formula).
+            pd_full = jnp.concatenate(
+                [draft_probs, jnp.zeros_like(draft_probs[:, :1])], axis=1)
+            pt_n = jnp.take_along_axis(p_t, n[:, None, None], axis=1)[:, 0]
+            pd_n = jnp.take_along_axis(pd_full, n[:, None, None],
+                                       axis=1)[:, 0]
+            res = jnp.maximum(pt_n - pd_n, 0.0)
+            mass = res.sum(axis=-1, keepdims=True)
+            res = jnp.where(mass > 0, res / jnp.maximum(mass, 1e-30), pt_n)
+            x_star = jax.random.categorical(
+                kr, jnp.log(res + 1e-38)).astype(jnp.int32)
+            pad_d = jnp.concatenate(
+                [d, jnp.zeros((B, 1), jnp.int32)], axis=1)
+            emitted = jnp.where(idx_c < n[:, None], pad_d,
+                                jnp.where(idx_c == n[:, None],
+                                          x_star[:, None], 0))
+        acc0 = n + 1
+        is_eos = emitted == eos
+        k_eos = jnp.where(is_eos.any(axis=1),
+                          jnp.argmax(is_eos, axis=1) + 1, C)
+        acc = jnp.minimum(jnp.minimum(acc0, limit - index), k_eos)
+        acc = jnp.where(active, acc, 0).astype(jnp.int32)
+        eos_in = (is_eos & (idx_c < acc[:, None])).any(axis=1)
+        new_index = index + acc
+        new_active = active & ~eos_in & (new_index < limit)
+        out_tokens = jnp.where(idx_c < acc[:, None], emitted,
+                               0).astype(jnp.int32)
+        nxt = jnp.take_along_axis(
+            emitted.astype(jnp.int32),
+            jnp.clip(acc - 1, 0, C - 1)[:, None], axis=1)
+        nxt = jnp.where(new_active[:, None], nxt, 0)
+        cache = api.spec_commit(new_cache, index, acc)
+        return out_tokens, acc, nxt, cache, new_index, new_active, key
+
+    if sample:
+        fn = body
+    else:
+        def fn(params, tokens, cache, index, active, limit, table, eos, key):
+            return body(params, tokens, cache, index, active, limit, table,
+                        eos, None, None, key)
+
+    donate = (2,)
+    if shardings is None:
+        return jax.jit(fn, donate_argnums=donate)
+    r = shardings.replicated
+    ins = (shardings.params, shardings.tokens, shardings.cache,
+           r, r, r, r, r) \
+        + ((shardings.logits, r) if sample else ()) + (r,)
+    outs = (shardings.tokens, r, shardings.tokens, shardings.cache, r, r, r)
+    return jax.jit(fn, in_shardings=ins, out_shardings=outs,
+                   donate_argnums=donate)
+
+
+def make_draft_rollback_step(cfg: ModelConfig, gamma: int,
+                             shardings: Optional[ServeShardings] = None,
+                             ring_shardings=None) -> Callable:
+    """(draft_cache, ring_snapshot, index, acc) -> draft_cache.
+
+    Rolls the draft's sliding-window rings back to the verify's accepted
+    prefix.  The draft loop wrote γ+1 positions ``index .. index+γ`` into
+    its rings in place (γ proposal steps plus the cache-fill step for the
+    last proposal); entries whose latest write was a REJECTED position
+    (offset ``r`` in [acc, γ]) are restored from the pre-round snapshot —
+    with γ+1 <= W each slot was written at most once, so the snapshot
+    value is exactly the entry a sequential decode rolled back to
+    ``index+acc`` would hold.  Full-attention draft leaves need nothing:
+    their slots past the rewound cursor are invalid until rewritten.
+    Inactive rows (``acc == 0``) had every draft write frozen, so
+    restore == no-op."""
+    windows = [cfg.layer_window(i) for i in range(cfg.pattern_period)
+               if cfg.layer_kind(i) == "attn"]
+    if any(0 < w < gamma + 1 for w in windows):
+        raise ValueError(
+            f"gamma {gamma} + 1 draft writes exceed a sliding window "
+            f"{min(w for w in windows if w > 0)}: a speculation round may "
+            "not overwrite a draft ring slot twice")
+
+    def fn(cache, snap, index, acc):
+        out = {}
+        for lname, lc in cache.items():
+            if lname not in snap:
+                out[lname] = lc
+                continue
+            W = jax.tree.leaves(snap[lname])[0].shape[2]
+            r = (jnp.arange(W)[None, :] - index[:, None]) % W   # (B, W)
+            restore = (r < gamma + 1) & (r >= acc[:, None])
+            sel = restore[None, :, :, None, None]
+            out[lname] = jax.tree.map(
+                lambda cur, old: jnp.where(sel, old, cur), lc, snap[lname])
+        return out
+
+    donate = (0,)       # snap buffers can't all alias outputs (cache already
+                        # donates the ring-shaped ones) — keep them whole
+    if shardings is None:
+        return jax.jit(fn, donate_argnums=donate)
+    r = shardings.replicated
+    ring_sh = ring_shardings if ring_shardings is not None else r
+    return jax.jit(fn, in_shardings=(shardings.cache, ring_sh, r, r),
+                   out_shardings=shardings.cache, donate_argnums=donate)
+
+
+def make_row_scatter_step(shardings: Optional[ServeShardings] = None,
+                          row_cache_shardings=None) -> Callable:
+    """(cache, row_cache, row) -> cache.
+
+    Scatters a B=1 cache pytree into batch slot ``row`` — the draft half
+    of a speculative admission (tokens/cursor/active/limit are owned by
+    the target's paged admit step; the draft only needs its cache row)."""
+
+    def fn(cache, row_cache, row):
+        row = jnp.asarray(row, jnp.int32)
+
+        def put(big, r_leaf):
+            starts = (jnp.int32(0), row) + (jnp.int32(0),) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(big, r_leaf.astype(big.dtype),
+                                                starts)
+        return jax.tree.map(put, cache, row_cache)
+
+    donate = (0,)
+    if shardings is None:
+        return jax.jit(fn, donate_argnums=donate)
+    r = shardings.replicated
+    row_sh = row_cache_shardings if row_cache_shardings is not None \
+        else jax.tree.map(lambda _: r, shardings.cache)
+    return jax.jit(fn, in_shardings=(shardings.cache, row_sh, r),
+                   out_shardings=shardings.cache, donate_argnums=donate)
+
+
 def make_admit_step(shardings: Optional[ServeShardings] = None,
                     row_cache_shardings=None) -> Callable:
     """(cache, tokens, index, active, limit,

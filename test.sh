@@ -9,6 +9,13 @@
 #   bash test.sh --paged-smoke        # fast lane: paged-KV/chunked-prefill
 #                                     # serving + paged-attention kernel
 #                                     # parity only (single-device subset)
+#   bash test.sh --spec-smoke         # fast lane: self-speculative decoding
+#                                     # (draft/verify parity, rollback, pool
+#                                     # truncation) single-device subset
+#
+# Test deps are declared in requirements-test.txt (pytest + hypothesis for
+# the pool property fuzz; a seeded fallback generator runs when hypothesis
+# is absent — surfaced below, never a silent skip).
 #
 # 8 fake CPU devices so the sharded train engine and the multi-device tests
 # (tests/test_distributed.py) exercise real GSPMD partitioning hermetically.
@@ -19,6 +26,17 @@ if [[ "${1:-}" == "--paged-smoke" ]]; then
   shift
   set -- tests/test_serving_paged.py tests/test_kernels.py -k \
       "paged or pool or chunk" -m "not slow" "$@"
+fi
+
+if [[ "${1:-}" == "--spec-smoke" ]]; then
+  shift
+  set -- tests/test_serving_spec.py tests/test_serving_paged.py -k \
+      "spec or truncat or pool or aging" -m "not slow" "$@"
+fi
+
+if ! python -c "import hypothesis" 2>/dev/null; then
+  echo "WARNING: hypothesis not installed (see requirements-test.txt) —" >&2
+  echo "         the pool fuzz runs its seeded fallback generator." >&2
 fi
 
 # https://github.com/tensorflow/tensorflow/blob/master/tensorflow/compiler/xla/xla.proto

@@ -1,0 +1,310 @@
+"""Self-speculative decoding on the paged continuous serving engine.
+
+Speculation must be a *numerical no-op* on the greedy token streams: a
+depth-truncated draft proposes γ tokens per round, the target verifies all
+γ+1 positions in one forward through the block table, rejected tokens roll
+back by cursor rewind + page release — and every request's greedy tokens
+stay byte-identical to contiguous solo generation.  That parity is checked
+with a REJECTION-HEAVY draft (random deep model, truncated prefix — the
+hard case: rollback, ring restore, partial accepts every round) and with
+the paper's own draft (a ``copying_zeroL``-expanded model truncated at its
+pre-expansion depth — function-preserving, so the acceptance rate is
+exactly 1.0).  Satellites: depth-truncated drafts of zeroL expansions are
+bitwise the pre-expansion checkpoint; admission aging bounds first-fit
+starvation of large page commitments.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.core import expansion as exp
+from repro.launch import mesh as mesh_lib
+from repro.models import registry
+from repro.models import transformer as tf
+from repro.train.serve_engine import ServeEngine
+from repro.train.serve_scheduler import ContinuousScheduler, Request
+
+CFG_DENSE = ModelConfig(name="sp-dense", family="dense", num_layers=4,
+                        d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                        vocab_size=64, max_seq_len=64)
+CFG_WINDOW = dataclasses.replace(CFG_DENSE, name="sp-window",
+                                 window_pattern=(4, 0))
+ARCH_CFGS = {"dense": CFG_DENSE, "window": CFG_WINDOW}
+
+REQ_SHAPES = ((5, 7), (9, 4), (3, 10), (6, 2), (4, 8), (7, 5))
+
+
+def _params(cfg, seed=0):
+    return registry.get_model(cfg).init(jax.random.PRNGKey(seed), cfg)
+
+
+def _requests(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (p,)).astype(np.int32),
+                    max_new_tokens=g) for p, g in REQ_SHAPES]
+
+
+def _assert_solo_parity(cfg, params, requests, results):
+    solo = ServeEngine(cfg, params, mesh=mesh_lib.single_device_mesh(),
+                       max_len=48)
+    for req, res in zip(requests, results):
+        want = solo.generate(req.prompt[None, :], req.max_new_tokens).tokens
+        np.testing.assert_array_equal(res.tokens, want[0])
+        assert len(res.new_tokens) == req.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# Greedy spec streams == contiguous solo, byte for byte
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", list(ARCH_CFGS))
+def test_spec_matches_solo_single_device(arch):
+    """Random target + truncated draft (rejection-heavy — rollback and
+    partial accepts every round), tight pool, chunked prefill: greedy
+    streams byte-identical to contiguous solo generation."""
+    cfg = ARCH_CFGS[arch]
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                      spec_decode=True, gamma=3, draft_depth=2)
+    reqs = _requests(cfg)
+    sched = ContinuousScheduler(eng, max_batch=2, chunk_len=4)
+    results = sched.run(reqs)
+    _assert_solo_parity(cfg, params, reqs, results)
+    stats = sched.spec_stats()
+    assert stats["spec_rounds"] > 0
+    assert 0 <= stats["spec_accepted"] <= stats["spec_proposed"]
+    # per-request accepted-length accounting
+    for res in results:
+        assert res.spec_rounds >= 1
+        assert res.mean_accepted_len >= 0.0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", list(ARCH_CFGS))
+def test_spec_matches_solo_mesh8(arch):
+    """Same parity on the 8-device data-parallel mesh (max_batch 4)."""
+    cfg = ARCH_CFGS[arch]
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, mesh=mesh_lib.make_train_mesh("host"),
+                      max_len=48, paged=True, block_size=4,
+                      spec_decode=True, gamma=3, draft_depth=2)
+    reqs = _requests(cfg)
+    results = ContinuousScheduler(eng, max_batch=4, chunk_len=4).run(reqs)
+    _assert_solo_parity(cfg, params, reqs, results)
+
+
+def test_spec_through_zeroL_expansion_accepts_everything():
+    """The paper's free draft: a ``copying_zeroL`` 2->4 expansion served
+    speculatively with the depth-2 truncated draft.  The expansion is
+    function-preserving and truncation recovers the source stack, so the
+    draft's greedy proposals ALWAYS match — acceptance rate exactly 1.0 —
+    and the stream equals the pre-expansion model served contiguous solo."""
+    cfg2, cfg4 = CFG_DENSE.with_depth(2), CFG_DENSE.with_depth(4)
+    p2 = _params(cfg2, seed=1)
+    p4 = exp.expand_params(p2, cfg2, 4, "copying_zeroL")
+    reqs = _requests(cfg2)[:4]
+    eng4 = ServeEngine(cfg4, p4, max_len=48, paged=True, block_size=4,
+                       spec_decode=True, gamma=3, draft_depth=2)
+    sched = ContinuousScheduler(eng4, max_batch=2, chunk_len=4)
+    results = sched.run(reqs)
+    _assert_solo_parity(cfg2, p2, reqs, results)
+    assert sched.acceptance_rate == 1.0
+
+
+def test_spec_with_external_draft_checkpoint():
+    """``draft_params`` (the --draft-checkpoint path): serving the expanded
+    model with the PRE-EXPANSION checkpoint as the draft is equivalent to
+    depth-truncating — same streams, same full acceptance."""
+    cfg2, cfg4 = CFG_DENSE.with_depth(2), CFG_DENSE.with_depth(4)
+    p2 = _params(cfg2, seed=1)
+    p4 = exp.expand_params(p2, cfg2, 4, "copying_zeroL")
+    reqs = _requests(cfg2)[:4]
+    eng = ServeEngine(cfg4, p4, max_len=48, paged=True, block_size=4,
+                      spec_decode=True, gamma=3, draft_params=p2)
+    assert eng.draft_cfg.num_layers == 2
+    sched = ContinuousScheduler(eng, max_batch=2, chunk_len=4)
+    results = sched.run(reqs)
+    _assert_solo_parity(cfg2, p2, reqs, results)
+    assert sched.acceptance_rate == 1.0
+
+
+def test_spec_zero_layer_draft():
+    """``draft_depth=0`` degenerates to the paper's zero-layer model
+    [embedding, LM head] as the draft: proposals are near-random but the
+    verified stream is still byte-identical to solo generation."""
+    cfg = CFG_DENSE
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                      spec_decode=True, gamma=2, draft_depth=0)
+    reqs = _requests(cfg)[:4]
+    results = ContinuousScheduler(eng, max_batch=2, chunk_len=4).run(reqs)
+    _assert_solo_parity(cfg, params, reqs, results)
+
+
+def test_spec_eos_and_temperature():
+    """EOS mid-budget terminates exactly as solo decode (stream truncated
+    at the first eos, slot freed); temperature sampling emits the full
+    budget of in-vocab tokens (distributional path — smoke)."""
+    cfg = CFG_DENSE
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    solo = ServeEngine(cfg, params, mesh=mesh_lib.single_device_mesh(),
+                       max_len=48)
+    stream = solo.generate(prompt[None, :], 12).tokens[0, 6:]
+    eos = int(stream[4])
+    cut = int(np.argmax(stream == eos)) + 1
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                      spec_decode=True, gamma=3, draft_depth=2)
+    sched = ContinuousScheduler(eng, max_batch=2, chunk_len=4, eos_id=eos)
+    res = sched.run([Request(prompt=prompt, max_new_tokens=12)])[0]
+    assert res.finish_reason == "eos"
+    np.testing.assert_array_equal(res.new_tokens, stream[:cut])
+
+    sched = ContinuousScheduler(eng, max_batch=2, chunk_len=4,
+                                temperature=0.8, seed=7)
+    for req, res in zip(_requests(cfg)[:4],
+                        sched.run(_requests(cfg)[:4])):
+        assert len(res.new_tokens) == req.max_new_tokens
+        assert (res.new_tokens >= 0).all()
+        assert (res.new_tokens < cfg.vocab_size).all()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: depth-truncated drafts of zeroL expansions ARE the checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_draft_truncation_is_function_preserving():
+    """After a ``copying_zeroL`` expansion, the depth-truncated draft at
+    the pre-expansion depth produces BYTE-IDENTICAL logits to the
+    pre-expansion checkpoint served directly (expansion appends the zeroed
+    blocks after the source stack and never touches embed/norm/head, so
+    truncation recovers the checkpoint exactly)."""
+    cfg2, cfg4 = CFG_DENSE.with_depth(2), CFG_DENSE.with_depth(4)
+    p2 = _params(cfg2, seed=1)
+    p4 = exp.expand_params(p2, cfg2, 4, "copying_zeroL")
+    draft = exp.truncate_params(p4, cfg4, 2)
+    toks = np.random.default_rng(0).integers(
+        0, cfg2.vocab_size, (2, 12)).astype(np.int32)
+    l2 = np.asarray(tf.lm_apply(p2, cfg2, toks)[0])
+    ld = np.asarray(tf.lm_apply(draft, cfg2, toks)[0])
+    assert (l2 == ld).all()
+    # ...and through the serve path: identical logits AND tokens.
+    r2 = ServeEngine(cfg2, p2, max_len=48).generate(
+        toks[:, :8], 6, return_logits=True)
+    rd = ServeEngine(cfg2, draft, max_len=48).generate(
+        toks[:, :8], 6, return_logits=True)
+    np.testing.assert_array_equal(r2.tokens, rd.tokens)
+    assert (r2.logits == rd.logits).all()
+
+
+def test_truncate_params_validation():
+    cfg = CFG_DENSE
+    params = _params(cfg)
+    with pytest.raises(ValueError):
+        exp.truncate_params(params, cfg, 6)          # deeper than the model
+    with pytest.raises(ValueError):
+        exp.truncate_params(params, cfg, -2)
+    cfgw = CFG_WINDOW                                 # period 2
+    with pytest.raises(ValueError):
+        exp.truncate_params(_params(cfgw), cfgw, 3)  # breaks the period
+    zero = exp.truncate_params(params, cfg, 0)
+    assert "blocks" not in zero and "embed" in zero
+
+
+# ---------------------------------------------------------------------------
+# Engine gates
+# ---------------------------------------------------------------------------
+
+
+def test_spec_requires_paged_and_attention_only():
+    cfg = CFG_DENSE
+    params = _params(cfg)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, max_len=48, spec_decode=True, draft_depth=2)
+    with pytest.raises(ValueError, match="draft_depth"):
+        ServeEngine(cfg, params, max_len=48, paged=True, spec_decode=True)
+    with pytest.raises(ValueError, match="gamma"):
+        ServeEngine(cfg, params, max_len=48, paged=True, spec_decode=True,
+                    gamma=0, draft_depth=2)
+    # γ+1 draft ring writes must fit the sliding window
+    with pytest.raises(ValueError, match="window"):
+        ServeEngine(CFG_WINDOW, _params(CFG_WINDOW), max_len=48, paged=True,
+                    spec_decode=True, gamma=4, draft_depth=2)
+    cfg_m = ModelConfig(name="sp-mamba", family="ssm", num_layers=4,
+                        d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
+                        vocab_size=64, max_seq_len=64, attention="none",
+                        position="none", block_pattern=("mamba",),
+                        ssm=SSMConfig(d_state=4))
+    with pytest.raises(NotImplementedError, match="attention-only"):
+        ServeEngine(cfg_m, _params(cfg_m), max_len=48, paged=True,
+                    spec_decode=True, gamma=3, draft_depth=2)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: admission aging bounds first-fit starvation
+# ---------------------------------------------------------------------------
+
+
+def _ticking_clock():
+    """Deterministic virtual clock: every observation advances 1ms, so
+    queue age grows with scheduler activity, not wall time."""
+    state = {"t": 0.0}
+
+    def time_fn():
+        state["t"] += 1e-3
+        return state["t"]
+    return time_fn
+
+
+def _starvation_workload(cfg):
+    """2 smalls, then a BIG page commitment, then a stream of smalls: pure
+    first-fit lets the later smalls jump the big one for its whole life.
+    Small budgets are STAGGERED so their lifetimes overlap — the pool's
+    outstanding commitment never drains to zero on its own."""
+    rng = np.random.default_rng(5)
+    gens = (3, 5, 4, 6, 5, 4, 6, 5)
+    small = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                         (4,)).astype(np.int32),
+                     max_new_tokens=g) for g in gens]
+    big = Request(prompt=rng.integers(0, cfg.vocab_size,
+                                      (8,)).astype(np.int32),
+                  max_new_tokens=24)
+    return small[:2] + [big] + small[2:], 2
+
+
+def test_admission_aging_prevents_starvation():
+    """num_blocks=8: the big request needs all 8 pages, smalls 2 each with
+    max_batch 2 — under pure first-fit the overlapping smalls never drain
+    the commitment and the big admits dead last.  With ``admission_age_s``
+    the aged head blocks later admissions, the pool drains, and the big is
+    served before the small backlog."""
+    cfg = CFG_DENSE
+    params = _params(cfg)
+
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4)
+
+    def run(age):
+        sched = ContinuousScheduler(eng, max_batch=2, num_blocks=8,
+                                    time_fn=_ticking_clock(),
+                                    sleep_fn=lambda s: None,
+                                    admission_age_s=age)
+        reqs, big_idx = _starvation_workload(cfg)
+        results = sched.run(reqs)
+        order = sorted(range(len(results)),
+                       key=lambda i: results[i].admitted_s)
+        return order.index(big_idx), results
+
+    rank_none, _ = run(None)                 # first-fit: big admits LAST
+    assert rank_none == len(_starvation_workload(cfg)[0]) - 1
+    rank_aged, results = run(0.02)           # aging: the backlog stops
+    assert rank_aged < rank_none             # jumping the aged head
+    # every request still completes with its full budget
+    for req, res in zip(_starvation_workload(cfg)[0], results):
+        assert len(res.new_tokens) == req.max_new_tokens
