@@ -691,6 +691,153 @@ def bench_serve_spec(fast=False):
               "run `--only serve_spec` for the mesh layout", flush=True)
 
 
+def bench_serve_prefix(fast=False):
+    """Prefix-sharing radix cache vs the plain paged engine on a
+    shared-system-prompt Poisson workload (the production shape the cache
+    is for: every request = one long shared template + a short unique
+    tail).
+
+    The first request prefills the 120-token system prompt cold and
+    publishes its full pages into the radix tree; every later request maps
+    those pages straight into its block table and prefills only its
+    ~5-token tail — TTFT on a cache hit drops by the prefill-work ratio
+    while aggregate tokens/s stays at least at the ``serve_paged``
+    baseline (the decode loop is untouched).  A burst phase additionally
+    demonstrates the ``blocks_needed`` admission fix: the workload shapes
+    straddle a page boundary (``(P+G) % block_size == 1``), where the old
+    ``ceil((P+G)/bs)`` worst case over-committed one page per request and
+    halved admitted concurrency in this pool.  Writes
+    ``BENCH_serve_prefix.json``."""
+    _fake_devices_for_serve()
+    import jax
+    import numpy as np
+    from repro.configs.base import ModelConfig
+    from repro.launch import mesh as mesh_lib
+    from repro.models import registry
+    from repro.train.serve_engine import ServeEngine
+    from repro.train.serve_scheduler import (ContinuousScheduler, Request,
+                                             summarize)
+
+    BS = 8                                             # tokens per page
+    SYS, TAIL, GEN = 248, 4, 13    # P = 252, G = 13: P+G-1 = 264 = 33 pages
+    #                                exactly; the old formula said 34.  The
+    #                                4-token tail is ONE pow2 prefill chunk:
+    #                                a hit is a single narrow dispatch vs
+    #                                the cold prompt's six wide ones
+    CFG = ModelConfig(name="bench-prefix", family="dense", num_layers=4,
+                      d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                      vocab_size=256, max_seq_len=512)
+    N = 6 if fast else 20
+    need_new = -(-(SYS + TAIL + GEN - 1) // BS)        # 17
+    need_old = -(-(SYS + TAIL + GEN) // BS)            # 18
+    num_blocks = 2 * need_new                          # fits 2 new / 1 old
+    max_batch = 6
+    max_len = SYS + TAIL + GEN + 7                     # 144 = 18 pages/row
+    rng = np.random.default_rng(0)
+    # Sparse arrivals (mean 20 ms): TTFT measures prefill work, not queue
+    # depth — the hit-vs-cold ratio is the cache's own effect.
+    arrivals = np.cumsum(rng.exponential(0.02, N))
+    rng2 = np.random.default_rng(1)
+    system = rng2.integers(0, CFG.vocab_size, (SYS,)).astype(np.int32)
+    reqs = [Request(prompt=np.concatenate(
+                [system, rng2.integers(0, CFG.vocab_size,
+                                       (TAIL,)).astype(np.int32)]),
+                    max_new_tokens=GEN, arrival_s=float(a), uid=i)
+            for i, a in enumerate(arrivals)]
+    params = registry.get_model(CFG).init(jax.random.PRNGKey(0), CFG)
+
+    def timed_run(sched):
+        t0 = time.perf_counter()
+        results = sched.run(reqs)
+        return results, summarize(results, time.perf_counter() - t0)
+
+    n_dev = len(jax.devices())
+    meshes = {"single": mesh_lib.single_device_mesh()}
+    if n_dev > 1:
+        meshes[f"mesh{n_dev}"] = mesh_lib.make_train_mesh("host")
+    out = {"requests": N, "block_size": BS, "num_blocks": num_blocks,
+           "system_prompt_tokens": SYS, "tail_tokens": TAIL,
+           "gen_tokens": GEN, "max_batch": max_batch, "arch": CFG.name,
+           "admission": {"pages_per_request": need_new,
+                         "pages_per_request_old_formula": need_old,
+                         "cold_capacity": num_blocks // need_new,
+                         "cold_capacity_old_formula":
+                             num_blocks // need_old},
+           "layouts": {}}
+    reps = 1 if fast else 4
+    for name, mesh in meshes.items():
+        base_eng = ServeEngine(CFG, params, mesh=mesh, max_len=max_len,
+                               paged=True, block_size=BS)
+        pfx_eng = ServeEngine(CFG, params, mesh=mesh, max_len=max_len,
+                              paged=True, block_size=BS, prefix_cache=True)
+        base_s = ContinuousScheduler(base_eng, max_batch=max_batch,
+                                     num_blocks=num_blocks)
+        pfx_s = ContinuousScheduler(pfx_eng, max_batch=max_batch,
+                                    num_blocks=num_blocks)
+        base_s.warmup(reqs)
+        pfx_s.warmup(reqs)
+        base = pfx = pfx_results = base_results = pfx_stats = None
+        ratios = []
+        for _ in range(reps):          # interleaved, median-paired (PR 4)
+            br, b = timed_run(base_s)
+            pr, p = timed_run(pfx_s)
+            ratios.append(p["tokens_per_s"] / max(b["tokens_per_s"], 1e-9))
+            if base is None or b["tokens_per_s"] > base["tokens_per_s"]:
+                base, base_results = b, br
+            if pfx is None or p["tokens_per_s"] > pfx["tokens_per_s"]:
+                pfx, pfx_results = p, pr     # telemetry of the SAME rep
+                pfx_stats = pfx_s.prefix_stats()
+        speedup = float(np.median(ratios))
+        # TTFT on cache HITS vs the same uids served without the cache:
+        # the prefill work skipped by mapping shared pages.
+        hit_uids = [i for i, r in enumerate(pfx_results)
+                    if r.prefix_tokens > 0]
+        ttft_hit = float(np.median([pfx_results[i].ttft_s
+                                    for i in hit_uids])) if hit_uids \
+            else float("nan")
+        ttft_cold = float(np.median([base_results[i].ttft_s
+                                     for i in hit_uids])) if hit_uids \
+            else float("nan")
+        pfx.update(pfx_stats)
+        # Burst phase (all arrivals 0, no cache): measured concurrency under
+        # the fixed blocks_needed — the old formula's analytic capacity in
+        # the same pool is half of it.
+        burst = [Request(prompt=r.prompt, max_new_tokens=GEN, uid=i)
+                 for i, r in enumerate(reqs[:4])]
+        burst_s = ContinuousScheduler(base_eng, max_batch=4,
+                                      num_blocks=num_blocks)
+        burst_s.run(burst)
+        out["layouts"][name] = {
+            "paged_baseline": base, "prefix_cache": pfx,
+            "throughput_ratio": speedup,
+            "ttft_hit_p50_s": ttft_hit,
+            "ttft_cold_p50_s": ttft_cold,
+            "ttft_hit_reduction": ttft_cold / max(ttft_hit, 1e-9),
+            "burst_peak_concurrency": burst_s.peak_concurrency,
+            "burst_peak_concurrency_old_formula":
+                out["admission"]["cold_capacity_old_formula"]}
+        _row(f"serve_prefix/{name}", pfx["wall_s"] * 1e6,
+             f"tokens_per_s={pfx['tokens_per_s']:.1f};"
+             f"baseline={base['tokens_per_s']:.1f};"
+             f"ratio={speedup:.2f};"
+             f"hits={pfx_stats['prefix_hits']}/"
+             f"{pfx_stats['prefix_requests']};"
+             f"skipped_tokens={pfx_stats['prefix_skipped_tokens']};"
+             f"ttft_hit_ms={ttft_hit * 1e3:.1f};"
+             f"ttft_cold_ms={ttft_cold * 1e3:.1f};"
+             f"ttft_reduction={ttft_cold / max(ttft_hit, 1e-9):.1f}x;"
+             f"burst_concurrency={burst_s.peak_concurrency}v"
+             f"{out['admission']['cold_capacity_old_formula']}")
+    if n_dev > 1:
+        with open("BENCH_serve_prefix.json", "w") as f:
+            json.dump(out, f, indent=1)
+        print("# wrote BENCH_serve_prefix.json", flush=True)
+    else:
+        print("# single device only (jax initialized before "
+              "bench_serve_prefix); BENCH_serve_prefix.json left untouched "
+              "— run `--only serve_prefix` for the mesh layout", flush=True)
+
+
 BENCHES = {
     "expansion_init": bench_expansion_init,
     "copying_variants": bench_copying_variants,
@@ -701,13 +848,14 @@ BENCHES = {
     "mup_transfer": bench_mup_transfer,
     "theory": bench_theory,
     "kernels": bench_kernels,
-    # last four: mutate the jax environment when they run first
+    # last five: mutate the jax environment when they run first
     # (`--only serve` / `--only serve_continuous` / `--only serve_paged`
-    #  / `--only serve_spec`)
+    #  / `--only serve_spec` / `--only serve_prefix`)
     "serve": bench_serve,
     "serve_continuous": bench_serve_continuous,
     "serve_paged": bench_serve_paged,
     "serve_spec": bench_serve_spec,
+    "serve_prefix": bench_serve_prefix,
 }
 
 

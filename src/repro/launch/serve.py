@@ -32,6 +32,16 @@ prompts prefilled ``--chunk-len`` tokens per scheduler iteration straight
 into the pool, pages freed on EOS.  ``--no-overlap`` disables the
 scheduler's dispatch-then-fetch double buffering (debugging).
 
+``--prefix-cache`` (with ``--paged``) turns on the prefix-sharing radix
+cache (``train/radix_cache``): finished prompts publish their full KV
+pages into a radix tree keyed by token content, later requests whose
+prompts share that prefix map the pages straight into their block tables
+and prefill only the unmatched tail (copy-on-write on an exact page
+boundary; LRU-leaf eviction under pool pressure).  The synthetic workload
+then shares a common system prefix across requests so the cache has
+traffic to hit, and the run reports hit-rate / skipped-token telemetry.
+``--no-prefix-cache`` (the default) serves every prompt cold.
+
 ``--spec-depth N`` (with ``--paged``) turns on SELF-SPECULATIVE decoding:
 the depth-N truncation of the served model (shared embedding / final norm
 / tied head — progressive training's free draft) proposes ``--gamma``
@@ -117,6 +127,13 @@ def main(argv=None):
                     help="max prefill chunk width per iteration for --paged")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable dispatch-then-fetch double buffering")
+    ap.add_argument("--prefix-cache", action="store_true", default=False,
+                    help="prefix-sharing radix cache over the page pool "
+                         "(with --paged); synthetic requests then share a "
+                         "common system prefix")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="serve every prompt cold (default)")
     ap.add_argument("--spec-depth", type=int, default=None,
                     help="self-speculative decoding: draft = the served "
                          "model truncated to this many layers (with --paged)")
@@ -134,6 +151,8 @@ def main(argv=None):
     spec = args.spec_depth is not None or args.draft_checkpoint is not None
     if spec and not args.paged:
         raise SystemExit("--spec-depth/--draft-checkpoint require --paged")
+    if args.prefix_cache and not args.paged:
+        raise SystemExit("--prefix-cache requires --paged")
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -147,22 +166,32 @@ def main(argv=None):
     if args.draft_checkpoint:          # its own latest step, manifest depth
         draft_params, _ = load_params(args.draft_checkpoint, cfg)
     rng = np.random.default_rng(args.seed)
+    # With the prefix cache on, continuous requests share a system prefix
+    # (half the prompt budget, but at least one full page — only full pages
+    # publish into the radix tree) so the cache has traffic to hit.
+    shared_len = (max(args.prompt_len // 2, args.block_size)
+                  if args.prefix_cache else 0)
     engine = ServeEngine(cfg, params, mesh=mesh,
-                         max_len=args.prompt_len + max(args.gen, 1) + 1,
+                         max_len=shared_len + args.prompt_len
+                         + max(args.gen, 1) + 1,
                          paged=args.paged, block_size=args.block_size,
                          num_blocks=args.num_blocks,
                          spec_decode=spec, gamma=args.gamma,
                          draft_depth=args.spec_depth,
-                         draft_params=draft_params)
+                         draft_params=draft_params,
+                         prefix_cache=args.prefix_cache)
 
     if args.continuous:
+        shared = rng.integers(0, cfg.vocab_size,
+                              (shared_len,)).astype(np.int32)
         lens = rng.integers(max(2, args.prompt_len // 4), args.prompt_len + 1,
                             args.requests)
         gens = rng.integers(max(2, args.gen // 4), max(args.gen, 2) + 1,
                             args.requests)
         arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
-        reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
-                                            (int(p),)).astype(np.int32),
+        reqs = [Request(prompt=np.concatenate(
+                    [shared, rng.integers(0, cfg.vocab_size,
+                                          (int(p),)).astype(np.int32)]),
                         max_new_tokens=int(g), arrival_s=float(a))
                 for p, g, a in zip(lens, gens, arrivals)]
         sched = ContinuousScheduler(engine, max_batch=args.max_batch,
@@ -185,6 +214,12 @@ def main(argv=None):
         print(f"aggregate tokens/s={stats['tokens_per_s']:.1f}  "
               f"ttft p50={stats['ttft_p50_s'] * 1e3:.1f}ms "
               f"p95={stats['ttft_p95_s'] * 1e3:.1f}ms")
+        if args.prefix_cache:
+            ps = sched.prefix_stats()
+            print(f"prefix cache: hits={ps['prefix_hits']}/"
+                  f"{ps['prefix_requests']} "
+                  f"(rate={ps['prefix_hit_rate']:.2%}) "
+                  f"skipped_tokens={ps['prefix_skipped_tokens']}")
         if spec:
             ss = sched.spec_stats()
             mal = [r.mean_accepted_len for r in results if r.spec_rounds]

@@ -109,6 +109,7 @@ class ContinuousState:
     draft_cache: object = None  # draft model's contiguous cache (spec only);
                                 # shares index/active with the target (both
                                 # count the same cached prefix)
+    radix: object = None        # RadixCache (host) — prefix_cache engines
 
     @property
     def batch(self) -> int:
@@ -132,6 +133,10 @@ class PrefillJob:
     chunks: list                     # chunk widths, consumed front to back
     carry: object                    # device B=1 prefill carry
     ctx: int = 0                     # tokens prefilled so far
+    prefix_tokens: int = 0           # prompt tokens served from shared pages
+    snap_at: int = 0                 # page boundary to snapshot the carry at
+                                     # (0: no snapshot; prefix_cache publish)
+    snapshot: object = None          # device carry copy taken at ``snap_at``
 
     @property
     def done(self) -> bool:
@@ -182,7 +187,8 @@ class ServeEngine:
                  num_blocks: Optional[int] = None,
                  prefill_cache_size: int = 8,
                  spec_decode: bool = False, gamma: int = 4,
-                 draft_depth: Optional[int] = None, draft_params=None):
+                 draft_depth: Optional[int] = None, draft_params=None,
+                 prefix_cache: bool = False):
         # Same RNG-layout guard as the train engine: sampled bits must not
         # depend on the mesh the categorical runs under.
         if "JAX_THREEFRY_PARTITIONABLE" not in os.environ:
@@ -218,6 +224,28 @@ class ServeEngine:
         self._dev_scalars = {}        # (dtype, value) -> replicated device put
         self.spec_decode = spec_decode
         self.gamma = gamma
+        self.prefix_cache = prefix_cache
+        if prefix_cache:
+            if not paged:
+                raise ValueError("prefix_cache requires paged=True (shared "
+                                 "prefixes are shared POOL PAGES mapped "
+                                 "through block tables)")
+            kinds = {cfg.layer_kind(i) for i in range(cfg.pattern_period)}
+            if kinds - {"attn"}:
+                raise NotImplementedError(
+                    f"{cfg.name}: prefix_cache covers attention-only archs; "
+                    f"recurrent {sorted(kinds - {'attn'})} states have no "
+                    "mid-prompt snapshot/restore yet")
+        # Empty-carry configs (every layer paged full attention) restore no
+        # state on a hit and may match at any page depth — including the
+        # exact-boundary COW rerun; window configs clamp matches to carry
+        # snapshots (see radix_cache module docstring).
+        self._carry_empty = all(
+            cfg.layer_kind(i) == "attn" and cfg.layer_window(i) == 0
+            for i in range(cfg.pattern_period))
+        self._pagecopy_built = {}     # (B, NB) -> page-copy step
+        self._carry_copy_jit = jax.jit(
+            lambda c: jax.tree.map(jnp.copy, c))
         if spec_decode:
             self._init_spec(draft_depth, draft_params, fsdp=fsdp,
                             moe_fsdp=moe_fsdp)
@@ -693,6 +721,10 @@ class ServeEngine:
         else:
             _, _, sh, _, init_cache, _ = self._cont_steps(batch, temperature)
             pool = None
+        radix = None
+        if self.prefix_cache and pool is not None:
+            from repro.train.radix_cache import RadixCache
+            radix = RadixCache(pool)
         draft_cache = None
         if self.spec_decode:
             _, _, _, _, init_draft, _, _, _ = self._spec_steps(
@@ -710,7 +742,8 @@ class ServeEngine:
                 limit=jax.device_put(np.zeros((batch,), np.int32), r),
                 key=jax.device_put(jax.random.PRNGKey(seed), r),
                 pool=pool,
-                draft_cache=draft_cache)
+                draft_cache=draft_cache,
+                radix=radix)
         return self._sync_table(state)
 
     def prefill_request(self, state: ContinuousState, prompt,
@@ -806,28 +839,89 @@ class ServeEngine:
                                    table_version=state.pool.version,
                                    table_host=tbl_host.copy())
 
+    def _page_copy(self, batch: int, temperature: float, num_blocks: int):
+        """Compiled COW page clone for one (batch, pool) size."""
+        key = (batch, num_blocks)
+        if key not in self._pagecopy_built:
+            _, _, sh, _, _, _ = self._paged_steps(batch, temperature,
+                                                  num_blocks)
+            self._pagecopy_built[key] = steps_lib.make_page_copy_step(sh)
+        return self._pagecopy_built[key]
+
+    def prefix_match(self, state: ContinuousState, prompt):
+        """Radix-tree lookup for an arriving prompt (None off a prefix-
+        cache engine, or on a miss).  The result feeds
+        ``pool.can_admit_prefix`` (scheduler preflight) and
+        :meth:`begin_prefill`; between those two host calls nothing can
+        evict the matched pages (eviction only runs inside allocation)."""
+        if state.radix is None:
+            return None
+        prompt = np.asarray(prompt, np.int32).ravel()
+        return state.radix.match(prompt, self._carry_empty)
+
     def begin_prefill(self, state: ContinuousState, row: int, prompt,
                       max_new_tokens: int, chunk_len: Optional[int] = None,
-                      temperature: float = 0.0):
+                      temperature: float = 0.0, match=None):
         """Admit a request into the pool and start its chunked prefill.
 
         Commits the request's worst-case pages (admission contract — see
         ``kv_pool``), assigns slot ``row``, and returns ``(state, job)``;
         drive the job with :meth:`prefill_chunk` once per scheduler
-        iteration, then :meth:`admit_paged`."""
+        iteration, then :meth:`admit_paged`.
+
+        ``match`` (a ``radix_cache.PrefixMatch`` from :meth:`prefix_match`)
+        maps the matched shared pages straight into the row's table and
+        starts the chunked prefill at the unmatched tail; an exact-boundary
+        full match clones its last page first (copy-on-write — a shared
+        page is never written) and re-runs one token at P-1 for the
+        first-token logits.  Greedy tokens stay byte-identical to a
+        cold-cache solo run: shared-page K/V is content+position
+        deterministic, and tail chunks attend over it through the block
+        table exactly as the request's own prefill would have."""
         prompt = np.asarray(prompt, np.int32).ravel()
-        if len(prompt) >= self.max_len:
-            raise ValueError(f"prompt {len(prompt)} exceeds max_len "
-                             f"{self.max_len}")
-        state.pool.admit(row, len(prompt), max_new_tokens)
+        P = len(prompt)
+        if P >= self.max_len:
+            raise ValueError(f"prompt {P} exceeds max_len {self.max_len}")
         _, _, _, _, _, init_carry = self._paged_steps(
             state.batch, temperature, state.pool.num_blocks)
+        skip, carry_src = 0, None
+        if match is not None:
+            cow = state.pool.admit_prefix(row, P, max_new_tokens,
+                                          match.pages, match.cow_last)
+            if cow is not None:
+                copy = self._page_copy(state.batch, temperature,
+                                       state.pool.num_blocks)
+                with self.activation_context():
+                    cache = copy(state.cache, np.int32(cow[0]),
+                                 np.int32(cow[1]))
+                state = dataclasses.replace(state, cache=cache)
+            skip, carry_src = match.skip, match.carry
+        else:
+            state.pool.admit(row, P, max_new_tokens)
         with self.activation_context():
-            carry = init_carry(self.params)
+            # The stored snapshot is handed out as a COPY: job carries are
+            # donated by every prefill_chunk step, and other matches of the
+            # same node still need the original buffers.
+            carry = (self._carry_copy_jit(carry_src)
+                     if carry_src is not None else init_carry(self.params))
+        # Publishers of carry-bearing configs snapshot their carry at the
+        # last page boundary at/below P-1 (matches clamp there: the tail
+        # always re-runs >= 1 real token); force a chunk edge onto that
+        # boundary so the snapshot is exact.
+        snap_at = 0
+        if state.radix is not None and not self._carry_empty:
+            boundary = ((P - 1) // self.block_size) * self.block_size
+            if boundary > skip:
+                snap_at = boundary
+        if snap_at:
+            chunks = (pow2_chunks(snap_at - skip, chunk_len)
+                      + pow2_chunks(P - snap_at, chunk_len))
+        else:
+            chunks = pow2_chunks(P - skip, chunk_len)
         job = PrefillJob(row=row, prompt=prompt,
                          max_new_tokens=max_new_tokens,
-                         chunks=pow2_chunks(len(prompt), chunk_len),
-                         carry=carry)
+                         chunks=chunks, carry=carry, ctx=skip,
+                         prefix_tokens=skip, snap_at=snap_at)
         return state, job
 
     def prefill_chunk(self, state: ContinuousState, job: PrefillJob,
@@ -863,6 +957,10 @@ class ServeEngine:
                 state = dataclasses.replace(state, cache=cache)
         job.carry = carry
         job.ctx += C
+        if job.snap_at and job.ctx == job.snap_at and job.snapshot is None:
+            # Device-copy, not alias: the next chunk donates job.carry.
+            with self.activation_context():
+                job.snapshot = self._carry_copy_jit(carry)
         return state, tok
 
     def admit_paged(self, state: ContinuousState, job: PrefillJob,
@@ -882,6 +980,16 @@ class ServeEngine:
                                     index=index, active=active, limit=limit)
         if self.spec_decode:
             state = self._admit_draft(state, job.row, job.prompt, temperature)
+        if state.radix is not None:
+            # Publish the prompt's full pages (their every slot now holds
+            # prompt K/V and is never written again: decode/verify/rollback
+            # all live at positions >= P).  First publisher wins; a carry
+            # snapshot (window configs) attaches at its page boundary.
+            n_pub = P // self.block_size
+            if n_pub:
+                state.radix.publish(
+                    job.prompt, state.pool.row_pages(job.row)[:n_pub],
+                    n_pub, carry=job.snapshot, carry_tokens=job.snap_at)
         return state
 
     def free_slot(self, state: ContinuousState, row: int) -> ContinuousState:

@@ -95,6 +95,8 @@ class RequestResult:
     admitted_s: float                 # prefill completion (= first token)
     finished_s: float
     spec_rounds: int = 0              # speculation rounds this request saw
+    prefix_tokens: int = 0            # prompt tokens served from shared
+                                      # pages (prefix-cache hit; 0 = cold)
 
     @property
     def tokens(self) -> np.ndarray:
@@ -151,6 +153,9 @@ class ContinuousScheduler:
         self.spec_rounds = 0                   # speculation telemetry
         self.spec_proposed = 0                 # draft tokens proposed
         self.spec_accepted = 0                 # draft tokens accepted
+        self.prefix_requests = 0               # prefix-cache telemetry:
+        self.prefix_hits = 0                   #   admissions / tree hits /
+        self.prefix_skipped_tokens = 0         #   prompt tokens not prefilled
 
     @property
     def acceptance_rate(self) -> float:
@@ -163,6 +168,15 @@ class ContinuousScheduler:
                 "spec_proposed": self.spec_proposed,
                 "spec_accepted": self.spec_accepted,
                 "acceptance_rate": self.acceptance_rate}
+
+    def prefix_stats(self) -> dict:
+        """Prefix-cache telemetry over the last run (zeros when the engine
+        serves without a radix cache)."""
+        return {"prefix_requests": self.prefix_requests,
+                "prefix_hits": self.prefix_hits,
+                "prefix_hit_rate": (self.prefix_hits
+                                    / max(self.prefix_requests, 1)),
+                "prefix_skipped_tokens": self.prefix_skipped_tokens}
 
     def warmup(self, requests: Sequence[Request]):
         """Compile every executable a serving run will need — the masked
@@ -195,7 +209,10 @@ class ContinuousScheduler:
                     f"{r.max_new_tokens} exceeds max_len {engine.max_len}")
             if paged:
                 bs = engine.block_size
-                need = -(-(len(r.prompt) + r.max_new_tokens) // bs)
+                # Mirror of KVBlockPool.blocks_needed: slots 0..P+G-2 hold
+                # K/V (the last sampled token is never cached), floor one.
+                need = max(1,
+                           -(-(len(r.prompt) + r.max_new_tokens - 1) // bs))
                 cap = self.num_blocks if self.num_blocks is not None \
                     else engine._resolved_num_blocks(self.max_batch)
                 if need > min(cap, engine.max_blocks):
@@ -206,7 +223,10 @@ class ContinuousScheduler:
         spec = paged and engine.spec_decode
         self.peak_concurrency = 0          # per-run (warmup doesn't count)
         self.spec_rounds = self.spec_proposed = self.spec_accepted = 0
+        self.prefix_requests = self.prefix_hits = 0
+        self.prefix_skipped_tokens = 0
         rounds_by_uid: dict = {}           # uid -> speculation rounds seen
+        prefix_by_uid: dict = {}           # uid -> prompt tokens hit-skipped
         pending = deque(sorted(reqs, key=lambda r: r.arrival_s))
         state = engine.continuous_state(
             self.max_batch, temperature=self.temperature, seed=self.seed,
@@ -234,7 +254,8 @@ class ContinuousScheduler:
                 new_tokens=np.asarray(tokens, np.int32),
                 finish_reason=reason, slot=slot, arrival_s=req.arrival_s,
                 admitted_s=t_first, finished_s=now,
-                spec_rounds=rounds_by_uid.pop(req.uid, 0))
+                spec_rounds=rounds_by_uid.pop(req.uid, 0),
+                prefix_tokens=prefix_by_uid.pop(req.uid, 0))
             done[req.uid] = res
             if on_finish is not None:
                 on_finish(res)
@@ -263,7 +284,15 @@ class ContinuousScheduler:
                         # taken: the row's limit caps emissions at
                         # limit - cursor (bonus included), so drafts beyond
                         # that were never in play and don't count against
-                        # the acceptance rate.
+                        # the acceptance rate.  Audited against the verify
+                        # step's accept rule at the limit boundary:
+                        # a = min(n+1, limit-cursor, k_eos), so accepted
+                        # drafts a-1 <= min(gamma, limit-cursor-1) with
+                        # equality for a perfect (copying_zeroL) draft even
+                        # when the row terminates on its budget mid-round —
+                        # acceptance_rate == 1.0 exactly (locked in by
+                        # tests/test_serving_spec.py::
+                        # test_acceptance_rate_exact_on_budget_boundary).
                         limit_row = (len(req.prompt) + req.max_new_tokens
                                      - 1)
                         self.spec_proposed += max(
@@ -300,9 +329,18 @@ class ContinuousScheduler:
                     and pending[skip].arrival_s <= now:
                 req = pending[skip]
                 if paged:
+                    # Match-aware admission: a prefix-cache hit references
+                    # its matched pages instead of allocating them, so its
+                    # capacity cost is only the unmatched tail (+ the COW
+                    # clone, + any matched page that stops being evictable).
+                    match = engine.prefix_match(state, req.prompt) \
+                        if engine.prefix_cache else None
                     need = state.pool.blocks_needed(len(req.prompt),
                                                     req.max_new_tokens)
-                    if not state.pool.can_admit(need):
+                    ok = state.pool.can_admit(need) if match is None else \
+                        state.pool.can_admit_prefix(need, match.pages,
+                                                    match.cow_last)
+                    if not ok:
                         if skip == 0 and self.admission_age_s is not None \
                                 and now - req.arrival_s \
                                 > self.admission_age_s:
@@ -314,7 +352,13 @@ class ContinuousScheduler:
                     state, job = engine.begin_prefill(
                         state, row, req.prompt, req.max_new_tokens,
                         chunk_len=self.chunk_len,
-                        temperature=self.temperature)
+                        temperature=self.temperature, match=match)
+                    if engine.prefix_cache:
+                        self.prefix_requests += 1
+                        if match is not None:
+                            self.prefix_hits += 1
+                            self.prefix_skipped_tokens += job.prefix_tokens
+                            prefix_by_uid[req.uid] = job.prefix_tokens
                     prefilling[row] = (req, job)
                 else:
                     pending.popleft()
@@ -409,14 +453,22 @@ class ContinuousScheduler:
 
 
 def summarize(results: Sequence[RequestResult], wall_s: float) -> dict:
-    """Aggregate serving metrics: useful-token throughput + TTFT tail."""
+    """Aggregate serving metrics: useful-token throughput + TTFT tail.
+
+    An empty result list reports NaN TTFT percentiles (not 0.0): an
+    errored/empty workload must not masquerade as a perfect one."""
     gen = int(sum(len(r.new_tokens) for r in results))
-    ttft = np.sort([r.ttft_s for r in results]) if results else np.zeros(1)
+    if results:
+        ttft = np.sort([r.ttft_s for r in results])
+        p50, p95 = (float(np.percentile(ttft, 50)),
+                    float(np.percentile(ttft, 95)))
+    else:
+        p50 = p95 = float("nan")
     return {
         "requests": len(results),
         "generated_tokens": gen,
         "wall_s": wall_s,
         "tokens_per_s": gen / max(wall_s, 1e-9),
-        "ttft_p50_s": float(np.percentile(ttft, 50)),
-        "ttft_p95_s": float(np.percentile(ttft, 95)),
+        "ttft_p50_s": p50,
+        "ttft_p95_s": p95,
     }

@@ -814,5 +814,40 @@ def make_paged_admit_step(shardings: Optional[ServeShardings] = None,
         donate_argnums=donate)
 
 
+def make_page_copy_step(shardings: Optional[ServeShardings] = None
+                        ) -> Callable:
+    """(cache, src, dst) -> cache.
+
+    Copy-on-write clone: duplicates pool page ``src`` into page ``dst`` in
+    every paged leaf (k_pages/v_pages — page axis 1, after the superblock
+    axis), leaving everything else untouched.  ``src``/``dst`` are traced
+    scalars, so one executable serves every clone.  Used when a prefix-
+    cache hit must write into its last *shared* page (the exact-boundary
+    one-token rerun): a page with refcount > 1 is never mutated — the row
+    writes into its private clone instead."""
+
+    def fn(cache, src, dst):
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+
+        def copy_leaf(path, leaf):
+            if not _is_paged_leaf(path):
+                return leaf
+            starts = (jnp.int32(0), src) + (jnp.int32(0),) * (leaf.ndim - 2)
+            sizes = (leaf.shape[0], 1) + leaf.shape[2:]
+            page = jax.lax.dynamic_slice(leaf, starts, sizes)
+            dsts = (jnp.int32(0), dst) + (jnp.int32(0),) * (leaf.ndim - 2)
+            return jax.lax.dynamic_update_slice(leaf, page, dsts)
+
+        return jax.tree_util.tree_map_with_path(copy_leaf, cache)
+
+    donate = (0,)
+    if shardings is None:
+        return jax.jit(fn, donate_argnums=donate)
+    r = shardings.replicated
+    return jax.jit(fn, in_shardings=(shardings.cache, r, r),
+                   out_shardings=shardings.cache, donate_argnums=donate)
+
+
 def count_params(params) -> int:
     return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -12,6 +12,9 @@
 #   bash test.sh --spec-smoke         # fast lane: self-speculative decoding
 #                                     # (draft/verify parity, rollback, pool
 #                                     # truncation) single-device subset
+#   bash test.sh --prefix-smoke       # fast lane: prefix-sharing radix cache
+#                                     # (share/COW/evict parity, refcount
+#                                     # fuzz) single-device subset
 #
 # Test deps are declared in requirements-test.txt (pytest + hypothesis for
 # the pool property fuzz; a seeded fallback generator runs when hypothesis
@@ -32,6 +35,12 @@ if [[ "${1:-}" == "--spec-smoke" ]]; then
   shift
   set -- tests/test_serving_spec.py tests/test_serving_paged.py -k \
       "spec or truncat or pool or aging" -m "not slow" "$@"
+fi
+
+if [[ "${1:-}" == "--prefix-smoke" ]]; then
+  shift
+  set -- tests/test_serving_prefix.py tests/test_serving_paged.py -k \
+      "prefix or radix or pool or cow" -m "not slow" "$@"
 fi
 
 if ! python -c "import hypothesis" 2>/dev/null; then

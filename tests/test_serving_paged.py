@@ -24,6 +24,7 @@ from repro.distributed import sharding as shd
 from repro.launch import mesh as mesh_lib
 from repro.models import registry
 from repro.train.kv_pool import KVBlockPool, PoolExhausted
+from repro.train.radix_cache import RadixCache
 from repro.train.serve_engine import ServeEngine, pow2_chunks
 from repro.train.serve_scheduler import ContinuousScheduler, Request
 
@@ -299,6 +300,113 @@ def test_pool_fuzz_poisson_arrivals_and_eos():
                        int(rng.integers(0, 5)))
                       for _ in range(int(rng.integers(1, 61)))]
             _drive_pool(events, int(rng.integers(2, 13)))
+
+
+def _drive_pool_prefix(events, num_blocks):
+    """Fuzz the refcount/COW/pin surface: a real ``RadixCache`` over the
+    pool, prompts drawn from a 2-token alphabet so prefixes collide
+    constantly.  Each event ``(row, p, tseed, g, e, spec, deep)``
+    interleaves prefix-hit admission (shared page mapping, exact-boundary
+    copy-on-write), publish (tree pins), speculative rollback,
+    ``deep``-truncation below the shared boundary, free-with-refs, and LRU
+    eviction whenever the free list runs dry.  ``check_invariants`` after
+    every op asserts refcount == table refs + tree pins, no shared page on
+    the free list, and the starvation guarantee; COW is additionally
+    checked to never touch a page with other references."""
+    pool = KVBlockPool(num_blocks=num_blocks, block_size=4, batch=6,
+                       max_blocks=8)
+    radix = RadixCache(pool)
+    live = {}
+    for row, p, tseed, g, e, spec, deep in events:
+        if row in live:                  # EOS while shared/pinned: pages
+            pool.free(row)               # with other references survive
+            del live[row]
+            pool.check_invariants()
+            continue
+        prompt = np.random.default_rng(tseed).integers(
+            0, 2, size=p).astype(np.int32)
+        need = pool.blocks_needed(p, g)
+        if need > min(pool.num_blocks, pool.max_blocks):
+            continue
+        limit = p + g - 1
+        match = radix.match(prompt, carryless=True)
+        if match is not None and pool.can_admit_prefix(
+                need, match.pages, match.cow_last):
+            refs = {pg: pool.ref_count(pg) for pg in match.pages}
+            cow = pool.admit_prefix(row, p, g, match.pages, match.cow_last)
+            if match.cow_last:
+                src, dst = cow
+                # COW never mutates a shared page: the source keeps its
+                # OTHER references; the row gets a fresh private clone.
+                assert src == match.pages[-1] and dst != src
+                assert pool.ref_count(src) == refs[src]
+                assert pool.ref_count(dst) == 1
+            start = match.skip
+        elif match is None and pool.can_admit(need):
+            pool.admit(row, p, g)
+            start = 0
+        else:
+            continue
+        pool.check_invariants()
+        pool.advance(row, p)             # tail prefill (never raises)
+        n_pub = p // pool.block_size
+        if n_pub:
+            radix.publish(prompt, pool.row_pages(row)[:n_pub], n_pub)
+        pool.check_invariants()
+        tokens = min(p + max(0, g - 1 - e), limit)
+        for t in range(p + 1, tokens + 1):
+            if spec and t % spec == 0:   # speculate ahead, roll back
+                pool.advance(row, min(t + spec, limit))
+                pool.truncate_row(row, t)
+                pool.check_invariants()
+            pool.advance(row, t)
+        if deep and start:               # rollback BELOW the shared
+            pool.truncate_row(row, max(0, start - 2))   # boundary: legal at
+            pool.check_invariants()      # pool level (refs drop, pinned
+            pool.advance(row, tokens)    # pages survive; fresh pages back
+            # the re-advance)
+        live[row] = True
+        pool.check_invariants()
+    for row in live:
+        pool.free(row)
+    pool.check_invariants()
+    while radix.evict_one():             # drain the tree, LRU-leaf-first
+        pool.check_invariants()
+    assert radix.num_nodes == 0          # all pins released...
+    assert pool.free_blocks == pool.num_blocks   # ...and all pages freed
+    assert pool.committed_blocks == 0
+
+
+def test_pool_fuzz_prefix_share_cow_evict():
+    """Random share/COW/publish/evict churn against the refcounted pool +
+    radix tree contract (see ``_drive_pool_prefix``); hypothesis when
+    installed, else 60 seeded event tapes over the same property."""
+    if HAVE_HYPOTHESIS:
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=40, deadline=None)
+        @given(st.lists(st.tuples(st.integers(0, 5),      # event row
+                                  st.integers(1, 14),     # prompt len
+                                  st.integers(0, 7),      # prompt content
+                                  st.integers(1, 10),     # budget
+                                  st.integers(0, 9),      # EOS after e toks
+                                  st.integers(0, 4),      # spec lookahead γ
+                                  st.booleans()),         # deep truncate
+                        min_size=1, max_size=60),
+               st.integers(2, 12))
+        def run(events, num_blocks):
+            _drive_pool_prefix(events, num_blocks)
+
+        run()
+    else:
+        rng = np.random.default_rng(0)
+        for _ in range(60):
+            events = [(int(rng.integers(0, 6)), int(rng.integers(1, 15)),
+                       int(rng.integers(0, 8)), int(rng.integers(1, 11)),
+                       int(rng.integers(0, 10)), int(rng.integers(0, 5)),
+                       bool(rng.integers(0, 2)))
+                      for _ in range(int(rng.integers(1, 61)))]
+            _drive_pool_prefix(events, int(rng.integers(2, 13)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,454 @@
+"""Prefix-sharing radix cache with copy-on-write pages on the paged engine.
+
+Prefix sharing must be a *numerical no-op*: a request whose prompt prefix
+matches the radix tree maps the published pool pages straight into its
+block table and prefills only the unmatched tail — and its greedy tokens
+stay byte-identical to the same request served alone against a cold cache
+(dense + window archs, 1x1 and the 8-device mesh, composed with
+speculative decoding where rollback never drops below a shared prefix).
+Structurally: pool refcounts equal table references + tree pins, a shared
+page never reaches the free list, copy-on-write never mutates a page with
+refcount > 1, and LRU-leaf eviction reclaims pinned-only pages when the
+free list runs dry.  Satellites: the ``blocks_needed`` admission
+off-by-one (over-committing one page whenever ``(P+G) % block_size == 1``)
+is fixed and demonstrably raises admitted concurrency; ``summarize()`` of
+an empty run reports NaN TTFT, not a perfect 0.0.
+"""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.launch import mesh as mesh_lib
+from repro.models import registry
+from repro.train.kv_pool import KVBlockPool, PoolExhausted
+from repro.train.radix_cache import RadixCache
+from repro.train.serve_engine import ServeEngine
+from repro.train.serve_scheduler import (ContinuousScheduler, Request,
+                                         summarize)
+
+CFG_DENSE = ModelConfig(name="pf-dense", family="dense", num_layers=4,
+                        d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                        vocab_size=64, max_seq_len=64)
+CFG_WINDOW = dataclasses.replace(CFG_DENSE, name="pf-window",
+                                 window_pattern=(4, 0))
+ARCH_CFGS = {"dense": CFG_DENSE, "window": CFG_WINDOW}
+
+
+def _params(cfg, seed=0):
+    return registry.get_model(cfg).init(jax.random.PRNGKey(seed), cfg)
+
+
+def _shared_workload(cfg, seed=0, gen=6):
+    """Six requests over one 12-token (3-page at block_size=4) shared
+    prefix S: three distinct tails, the exact page-boundary prompt S
+    itself (the COW rerun case), a full repeat, and a mid-prefix
+    divergence (matches one page only)."""
+    rng = np.random.default_rng(seed)
+    S = rng.integers(0, cfg.vocab_size, (12,)).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab_size, (t,)).astype(np.int32)
+             for t in (3, 5, 2)]
+    div = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    prompts = [np.concatenate([S, tails[0]]),
+               np.concatenate([S, tails[1]]),
+               np.concatenate([S, tails[2]]),
+               S.copy(),
+               np.concatenate([S, tails[0]]),
+               np.concatenate([S[:4], div])]
+    return [Request(prompt=p, max_new_tokens=gen) for p in prompts]
+
+
+def _assert_solo_parity(cfg, params, requests, results):
+    solo = ServeEngine(cfg, params, mesh=mesh_lib.single_device_mesh(),
+                       max_len=48)
+    for req, res in zip(requests, results):
+        want = solo.generate(req.prompt[None, :], req.max_new_tokens).tokens
+        np.testing.assert_array_equal(res.tokens, want[0])
+        assert len(res.new_tokens) == req.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# Prefix-cache hits == cold-cache solo, byte for byte
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", list(ARCH_CFGS))
+def test_prefix_matches_solo_single_device(arch):
+    """max_batch 1 serves the workload sequentially, so every hit pattern
+    is deterministic: dense matches at any page depth (full repeat 12,
+    exact boundary 11 = P-1 skipped + one COW rerun token, divergence 4);
+    window clamps to the publisher's carry snapshot (12) and misses where
+    no snapshot fits below P."""
+    cfg = ARCH_CFGS[arch]
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                      prefix_cache=True)
+    reqs = _shared_workload(cfg)
+    sched = ContinuousScheduler(eng, max_batch=1, chunk_len=4)
+    results = sched.run(reqs)
+    _assert_solo_parity(cfg, params, reqs, results)
+    want_hits = ([0, 12, 12, 11, 12, 4] if arch == "dense"
+                 else [0, 12, 12, 0, 12, 0])
+    assert [r.prefix_tokens for r in results] == want_hits
+    stats = sched.prefix_stats()
+    assert stats["prefix_requests"] == len(reqs)
+    assert stats["prefix_hits"] == sum(1 for h in want_hits if h)
+    assert stats["prefix_skipped_tokens"] == sum(want_hits)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", list(ARCH_CFGS))
+def test_prefix_matches_solo_mesh8(arch):
+    """Same parity on the 8-device data-parallel mesh (max_batch 4: the
+    first wave prefills concurrently and cold; later admissions hit)."""
+    cfg = ARCH_CFGS[arch]
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, mesh=mesh_lib.make_train_mesh("host"),
+                      max_len=48, paged=True, block_size=4,
+                      prefix_cache=True)
+    reqs = _shared_workload(cfg)
+    sched = ContinuousScheduler(eng, max_batch=4, chunk_len=4)
+    results = sched.run(reqs)
+    _assert_solo_parity(cfg, params, reqs, results)
+    assert sched.prefix_hits >= 1
+
+
+@pytest.mark.parametrize("arch", list(ARCH_CFGS))
+def test_prefix_composed_with_spec_decode(arch):
+    """Prefix hits + self-speculative decoding (rejection-heavy truncated
+    draft): rollback rewinds cursors only to positions >= P, so it can
+    never truncate below a shared prefix's pages — streams stay
+    byte-identical to cold-cache solo."""
+    cfg = ARCH_CFGS[arch]
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                      prefix_cache=True, spec_decode=True, gamma=3,
+                      draft_depth=2)
+    reqs = _shared_workload(cfg)
+    sched = ContinuousScheduler(eng, max_batch=2, chunk_len=4)
+    results = sched.run(reqs)
+    _assert_solo_parity(cfg, params, reqs, results)
+    # first wave (2 requests) prefills cold; dense later hits at any depth,
+    # window only where the publisher's snapshot fits below P
+    assert sched.prefix_hits >= (4 if arch == "dense" else 2)
+    assert sched.spec_stats()["spec_rounds"] > 0
+
+
+def test_prefix_cache_under_eviction_pressure():
+    """Tight pool (6 pages): serving the shared-prefix workload forces the
+    evictor to reclaim pinned-only pages mid-run, and every stream still
+    matches cold-cache solo."""
+    cfg = CFG_DENSE
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                      prefix_cache=True)
+    reqs = _shared_workload(cfg)
+    sched = ContinuousScheduler(eng, max_batch=1, chunk_len=4, num_blocks=6)
+    results = sched.run(reqs)
+    _assert_solo_parity(cfg, params, reqs, results)
+    assert sched.prefix_hits >= 1
+
+
+def test_prefix_publish_match_evict_lifecycle():
+    """Engine-level lifecycle against a 4-page pool, one request at a
+    time (max_new 1: prefill only): publish pins survive free-on-EOS, a
+    repeat prompt hits, filling the pool evicts the LRU leaf path, and
+    the evicted prefix misses afterwards — invariants hold throughout."""
+    cfg = CFG_DENSE
+    eng = ServeEngine(cfg, _params(cfg), max_len=48, paged=True,
+                      block_size=4, prefix_cache=True)
+    solo = ServeEngine(cfg, eng.params, mesh=mesh_lib.single_device_mesh(),
+                       max_len=48)
+    state = eng.continuous_state(1, num_blocks=4)
+    rng = np.random.default_rng(2)
+    pa, pb, pc = (rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+                  for _ in range(3))
+
+    def serve(state, prompt, match=None):
+        state, job = eng.begin_prefill(state, 0, prompt, 1, chunk_len=4,
+                                       match=match)
+        tok = None
+        while not job.done:
+            state, tok = eng.prefill_chunk(state, job)
+        state = eng.admit_paged(state, job, tok)
+        state.pool.check_invariants()
+        state = eng.free_slot(state, 0)
+        state.pool.check_invariants()
+        want = solo.generate(prompt[None, :], 1).tokens[0, -1]
+        assert int(np.asarray(tok)[0, 0]) == int(want)
+        return state
+
+    state = serve(state, pa)                     # publishes 2 pages
+    assert state.pool.free_blocks == 2 and state.pool.evictable_blocks == 2
+    state = serve(state, pb)                     # pool now fully pinned
+    assert state.pool.free_blocks == 0 and state.pool.evictable_blocks == 4
+    match = eng.prefix_match(state, pb)          # warm repeat: full 2 pages
+    assert match is not None and match.skip == 7 and match.cow_last
+    state = serve(state, pb, match=match)        # COW rerun, re-publish noop
+    assert state.radix.evicted_pages == 1        # one page for the clone
+    state = serve(state, pc)                     # needs 2 more: evict LRU
+    assert state.radix.evicted_pages >= 2
+    assert eng.prefix_match(state, pa) is None   # pa's path was LRU victim
+    assert eng.prefix_match(state, pc) is not None
+    state.pool.check_invariants()
+
+
+def test_prefix_cache_gates():
+    """prefix_cache requires the paged engine and attention-only archs
+    (recurrent states have no mid-prompt snapshot/restore)."""
+    cfg = CFG_DENSE
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, _params(cfg), max_len=48, prefix_cache=True)
+    cfg_m = ModelConfig(name="pf-mamba", family="ssm", num_layers=4,
+                        d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
+                        vocab_size=64, max_seq_len=64, attention="none",
+                        position="none", block_pattern=("mamba",),
+                        ssm=SSMConfig(d_state=4))
+    with pytest.raises(NotImplementedError, match="attention-only"):
+        ServeEngine(cfg_m, _params(cfg_m), max_len=48, paged=True,
+                    prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# Pool: refcounts, sharing, copy-on-write, pins
+# ---------------------------------------------------------------------------
+
+
+def test_pool_share_refcount_and_free():
+    pool = KVBlockPool(num_blocks=8, block_size=4, batch=4, max_blocks=8)
+    pool.admit(0, 8, 1)
+    pool.advance(0, 8)
+    pages = list(pool.row_pages(0))
+    for p in pages:
+        pool.pin(p)                              # tree publish
+        assert pool.ref_count(p) == 2
+    assert pool.evictable_blocks == 0            # row still references them
+    cow = pool.admit_prefix(1, 8, 1, pages)      # second row shares both
+    assert cow is None
+    assert [pool.ref_count(p) for p in pages] == [3, 3]
+    assert (pool.table[1, :2] == pages).all()
+    pool.free(0)
+    assert [pool.ref_count(p) for p in pages] == [2, 2]
+    assert pool.free_blocks == 6                 # shared pages never freed
+    pool.free(1)
+    assert pool.evictable_blocks == 2            # pin-only now
+    pool.check_invariants()
+    for p in pages:
+        pool.unpin(p)
+    assert pool.free_blocks == 8
+    pool.check_invariants()
+
+
+def test_pool_cow_never_mutates_shared():
+    """admit_prefix(cow_last=True) swaps the last shared page for a fresh
+    clone target: the source keeps its other references untouched (it is
+    never written), the row's table points at the private clone."""
+    pool = KVBlockPool(num_blocks=8, block_size=4, batch=4, max_blocks=8)
+    pool.admit(0, 8, 1)
+    pool.advance(0, 8)
+    pages = list(pool.row_pages(0))
+    for p in pages:
+        pool.pin(p)
+    src, dst = pool.admit_prefix(1, 8, 1, pages, cow_last=True)
+    assert src == pages[1] and dst not in pages
+    assert pool.ref_count(src) == 2              # row 0 + pin (row 1 left)
+    assert pool.ref_count(dst) == 1
+    assert pool.table[1, 0] == pages[0] and pool.table[1, 1] == dst
+    pool.check_invariants()
+    pool.free(1)
+    assert pool.ref_count(dst) == 0              # private clone freed
+    assert pool.ref_count(src) == 2
+    pool.check_invariants()
+    with pytest.raises(ValueError):
+        pool.admit_prefix(2, 8, 1, [], cow_last=True)
+    with pytest.raises(ValueError):
+        pool.admit_prefix(2, 4, 1, pages)        # 2 shared > 1-page need
+
+
+def test_pool_admission_accounting_with_shares():
+    """can_admit_prefix charges only the unmatched tail (+COW), and counts
+    matched pinned-only pages that stop being evictable."""
+    pool = KVBlockPool(num_blocks=4, block_size=4, batch=4, max_blocks=8)
+    pool.admit(0, 8, 1)
+    pool.advance(0, 8)
+    pages = list(pool.row_pages(0))
+    for p in pages:
+        pool.pin(p)
+    pool.free(0)                                 # 2 free + 2 pin-only
+    # worst case 3 pages, 2 matched -> 1 own page; matched pages lose
+    # evictability (2) => 1 + 2 <= free 2 + evictable 2
+    assert pool.can_admit_prefix(3, pages)
+    pool.admit_prefix(1, 8, 4, pages)
+    assert not pool.can_admit(2)                 # 1 remaining + 2 > 2 + 0
+    assert pool.can_admit(1)
+    pool.check_invariants()
+
+
+def test_pool_truncate_across_shared_boundary():
+    """truncate_row below a shared prefix drops only THIS row's references
+    — pinned/shared pages stay allocated off the free list (the serving
+    engine never truncates below P, but the pool must stay sound)."""
+    pool = KVBlockPool(num_blocks=8, block_size=4, batch=4, max_blocks=8)
+    pool.admit(0, 8, 1)
+    pool.advance(0, 8)
+    pages = list(pool.row_pages(0))
+    for p in pages:
+        pool.pin(p)
+    pool.admit_prefix(1, 8, 9, pages)
+    pool.advance(1, 16)                          # two private decode pages
+    assert pool.truncate_row(1, 2)               # below the shared boundary
+    assert [pool.ref_count(p) for p in pages] == [3, 2]
+    assert pool.free_blocks == 6                 # shared pages NOT freed
+    pool.check_invariants()
+    pool.advance(1, 16)                          # re-advance self-allocates
+    pool.check_invariants()
+
+
+def test_pool_evictor_protocol():
+    """With no evictor a dry free list raises even when pages are
+    pinned-only; a registered evictor is called until a page frees."""
+    pool = KVBlockPool(num_blocks=2, block_size=4, batch=4, max_blocks=8)
+    pool.admit(0, 8, 1)
+    pool.advance(0, 8)
+    pinned = list(pool.row_pages(0))
+    for p in pinned:
+        pool.pin(p)
+    pool.free(0)
+    assert pool.can_admit(2)                     # backed by evictable pages
+    pool.admit(1, 8, 1)
+    with pytest.raises(PoolExhausted):           # evictor unset
+        pool.advance(1, 8)
+
+    class Unpinner:                              # minimal evictor protocol
+        def evict_one(self):
+            if not pinned:
+                return False
+            pool.unpin(pinned.pop())
+            return True
+
+    pool.evictor = Unpinner()
+    assert pool.advance(1, 8)                    # reclaims both pins
+    assert pool.free_blocks == 0 and pool.evictable_blocks == 0
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Radix tree: publish/match/dedup/LRU-evict (host-only, no engine)
+# ---------------------------------------------------------------------------
+
+
+def _pool_with_row(n_tokens, num_blocks=8, row=0, gen=1):
+    pool = KVBlockPool(num_blocks=num_blocks, block_size=4, batch=4,
+                       max_blocks=8)
+    pool.admit(row, n_tokens, gen)
+    pool.advance(row, n_tokens)
+    return pool
+
+
+def test_radix_publish_match_dedup_and_lru():
+    pool = _pool_with_row(12)
+    radix = RadixCache(pool)
+    prompt = np.arange(12, dtype=np.int32)
+    pages = pool.row_pages(0)
+    assert radix.publish(prompt, pages, 3) == 3
+    assert radix.publish(prompt, pages, 3) == 0      # dedup: first wins
+    assert sorted(radix.pinned_pages()) == sorted(pages)
+    # full-page-granularity matches, carryless
+    m = radix.match(np.arange(14, dtype=np.int32), carryless=True)
+    assert m.skip == 12 and list(m.pages) == list(pages) and not m.cow_last
+    m = radix.match(np.arange(12, dtype=np.int32), carryless=True)
+    assert m.skip == 11 and m.cow_last               # exact boundary: COW
+    assert m.tokens_matched == 12
+    m = radix.match(np.arange(7, dtype=np.int32), carryless=True)
+    assert m.skip == 4 and len(m.pages) == 1         # partial page ignored
+    div = np.concatenate([np.arange(4), [63], np.arange(5, 12)])
+    m = radix.match(div.astype(np.int32), carryless=True)
+    assert m.skip == 4                               # divergence at page 1
+    assert radix.match(np.arange(3, dtype=np.int32), carryless=True) is None
+    # carry-bearing configs need a snapshot node
+    assert radix.match(np.arange(14, dtype=np.int32), carryless=False) \
+        is None
+    radix.publish(prompt, pages, 3, carry={"ring": "snap"}, carry_tokens=8)
+    m = radix.match(np.arange(14, dtype=np.int32), carryless=False)
+    assert m.skip == 8 and m.carry == {"ring": "snap"} and len(m.pages) == 2
+    # the snapshot extent must sit strictly below P
+    assert radix.match(np.arange(8, dtype=np.int32), carryless=False) is None
+
+
+def test_radix_lru_leaf_eviction_order():
+    """Pinned-only leaves evict least-recently-used first; interior nodes
+    follow only once their subtree drains; row-referenced pages never."""
+    pool = _pool_with_row(8)
+    radix = RadixCache(pool)
+    pa = np.arange(8, dtype=np.int32)
+    radix.publish(pa, pool.row_pages(0), 2)
+    pool.free(0)
+    pool.admit(1, 8, 1)
+    pool.advance(1, 8)
+    pb = (10 + np.arange(8)).astype(np.int32)
+    radix.publish(pb, pool.row_pages(1), 2)
+    pool.free(1)
+    assert radix.num_nodes == 4 and pool.evictable_blocks == 4
+    radix.match(pa, carryless=True)                  # touch pa's path last
+    assert radix.evict_one()
+    m = radix.match(pb, carryless=True)
+    assert m is not None and m.skip == 4             # pb's LEAF was the LRU
+    m = radix.match(pa, carryless=True)
+    assert m is not None and m.skip == 7 and m.cow_last
+    # a row referencing a page protects it from eviction
+    cow = pool.admit_prefix(2, 8, 1, m.pages, m.cow_last)
+    assert cow is not None
+    while radix.evict_one():
+        pool.check_invariants()
+    assert pool.ref_count(m.pages[0]) >= 1           # still row-referenced
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: blocks_needed admission off-by-one (over-commit) fix
+# ---------------------------------------------------------------------------
+
+
+def test_blocks_needed_boundary_regression():
+    """Slots 0..P+G-2 hold K/V: (P+G) % bs == 1 must NOT round up an extra
+    page.  The tighter count demonstrably raises admitted concurrency, and
+    a boundary-straddling request survives a FULL spec-decode run (clamped
+    verify/advance at limit = P+G-1) in a pool sized to the tight count."""
+    pool = KVBlockPool(num_blocks=8, block_size=4, batch=4, max_blocks=8)
+    assert pool.blocks_needed(5, 8) == 3      # 12 slots; the old code said 4
+    assert pool.blocks_needed(1, 1) == 1      # floor at one page
+    assert pool.blocks_needed(4, 1) == 1      # exactly one page
+    assert pool.blocks_needed(4, 13) == 4     # 16 slots
+
+    cfg = CFG_DENSE
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                      spec_decode=True, gamma=3, draft_depth=2)
+    rng = np.random.default_rng(4)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (5,)).astype(np.int32),
+                    max_new_tokens=8) for _ in range(2)]
+    # one boundary request through a pool of exactly its tight count: the
+    # old preflight mirror (ceil((P+G)/bs) = 4 > 3) refused to serve it
+    sched1 = ContinuousScheduler(eng, max_batch=1, chunk_len=4, num_blocks=3)
+    _assert_solo_parity(cfg, params, reqs[:1], sched1.run(reqs[:1]))
+    # two of them concurrently in 6 pages: 3+3 fits, the old 4+4 could not
+    assert 2 * -(-(5 + 8) // 4) > 6
+    sched2 = ContinuousScheduler(eng, max_batch=2, chunk_len=4, num_blocks=6)
+    _assert_solo_parity(cfg, params, reqs, sched2.run(reqs))
+    assert sched2.peak_concurrency == 2
+
+
+# ---------------------------------------------------------------------------
+# Satellite: summarize() of an empty run is NaN, not a perfect 0.0
+# ---------------------------------------------------------------------------
+
+
+def test_summarize_empty_results_is_nan():
+    s = summarize([], 1.0)
+    assert s["requests"] == 0 and s["generated_tokens"] == 0
+    assert math.isnan(s["ttft_p50_s"]) and math.isnan(s["ttft_p95_s"])
+    assert s["tokens_per_s"] == 0.0

@@ -133,6 +133,37 @@ def test_spec_with_external_draft_checkpoint():
     assert sched.acceptance_rate == 1.0
 
 
+def test_acceptance_rate_exact_on_budget_boundary():
+    """Telemetry lock-in for the in-play proposal clamp (serve_scheduler:
+    ``spec_proposed += min(gamma, limit - cursor - 1)``): the verify step
+    accepts ``a = min(n+1, limit-cursor, k_eos)`` tokens, so a perfect
+    (``copying_zeroL`` depth-truncated) draft accepts EVERY in-play draft
+    even on the final round, where the budget caps emissions below a full
+    gamma.  Budgets here make every row terminate mid-round
+    ((G-1) % (gamma+1) != 0) — counting raw gamma proposals per round
+    would report a rate < 1.0 and mask real draft regressions."""
+    cfg2, cfg4 = CFG_DENSE.with_depth(2), CFG_DENSE.with_depth(4)
+    p2 = _params(cfg2, seed=1)
+    p4 = exp.expand_params(p2, cfg2, 4, "copying_zeroL")
+    rng = np.random.default_rng(7)
+    shapes = ((5, 6), (7, 7), (4, 8), (6, 10))   # (G-1) % 4 in {1, 2, 3}
+    reqs = [Request(prompt=rng.integers(0, cfg2.vocab_size,
+                                        (p,)).astype(np.int32),
+                    max_new_tokens=g) for p, g in shapes]
+    eng4 = ServeEngine(cfg4, p4, max_len=48, paged=True, block_size=4,
+                       spec_decode=True, gamma=3, draft_depth=2)
+    sched = ContinuousScheduler(eng4, max_batch=2, chunk_len=4)
+    results = sched.run(reqs)
+    _assert_solo_parity(cfg2, p2, reqs, results)
+    for res in results:
+        assert res.finish_reason == "length"     # budget, never EOS
+    stats = sched.spec_stats()
+    assert stats["spec_rounds"] > 0
+    assert stats["spec_proposed"] > 0
+    assert stats["spec_accepted"] == stats["spec_proposed"]
+    assert sched.acceptance_rate == 1.0          # exact, not approximate
+
+
 def test_spec_zero_layer_draft():
     """``draft_depth=0`` degenerates to the paper's zero-layer model
     [embedding, LM head] as the draft: proposals are near-random but the
