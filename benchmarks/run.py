@@ -571,7 +571,34 @@ def bench_serve_paged(fast=False):
               "run `--only serve_paged` for the mesh layout", flush=True)
 
 
-def bench_serve_spec(fast=False):
+def _spec_bench_cfg(arch, draft_layers):
+    """Shallow base config for the spec-decode bench — any registry
+    family: the serving matrix is closed, so the bench records dense,
+    MLA (paged latents) and recurrent (mamba/rwkv checkpoint-ring
+    rollback) trajectories alike."""
+    from repro.configs.base import ModelConfig, SSMConfig
+    common = dict(num_layers=draft_layers, d_model=64, num_heads=4,
+                  num_kv_heads=4, d_ff=128, vocab_size=256, max_seq_len=256)
+    if arch == "dense":
+        return ModelConfig(name="bench-spec", family="dense", **common)
+    if arch == "mla":
+        return ModelConfig(name="bench-spec-mla", family="dense",
+                           attention="mla", mla_kv_lora_rank=16, **common)
+    if arch == "mamba":
+        return ModelConfig(name="bench-spec-mamba", family="ssm",
+                           attention="none", position="none",
+                           block_pattern=("mamba",),
+                           ssm=SSMConfig(d_state=8), **common)
+    if arch == "rwkv":
+        return ModelConfig(name="bench-spec-rwkv", family="ssm",
+                           attention="none", position="none",
+                           norm="layernorm", block_pattern=("rwkv",),
+                           ssm=SSMConfig(kind="rwkv6", head_dim=16),
+                           **common)
+    raise ValueError(f"unknown --spec-arch {arch!r}")
+
+
+def bench_serve_spec(fast=False, arch="dense"):
     """Self-speculative decoding vs the paged continuous baseline on the
     long-tail Poisson workload.
 
@@ -580,13 +607,14 @@ def bench_serve_spec(fast=False):
     the pre-expansion depth is function-preserving and the acceptance rate
     the draft ACTUALLY achieves is 1.0: every speculation round replaces
     γ+1 sequential full-depth decode steps with γ+1 shallow draft steps
-    plus ONE multi-token verify forward.  Writes ``BENCH_serve_spec.json``
-    (acceptance rate, aggregate tokens/s vs the ``serve_paged`` baseline,
-    TTFT p50/p95 deltas)."""
+    plus ONE multi-token verify forward.  ``arch`` (CLI ``--spec-arch``)
+    selects the architecture: dense (default), mla, mamba or rwkv.
+    Writes ``BENCH_serve_spec.json`` (``BENCH_serve_spec_<arch>.json``
+    for non-dense archs): acceptance rate, aggregate tokens/s vs the
+    ``serve_paged`` baseline, TTFT p50/p95 deltas."""
     _fake_devices_for_serve()
     import jax
     import numpy as np
-    from repro.configs.base import ModelConfig
     from repro.core import expansion as exp
     from repro.launch import mesh as mesh_lib
     from repro.models import registry
@@ -601,9 +629,7 @@ def bench_serve_spec(fast=False):
     # CPU — the same regime a real accelerator decode loop lives in — and
     # decode-heavy generations (speculation accelerates the decode loop;
     # prefill is shared).
-    BASE = ModelConfig(name="bench-spec", family="dense", num_layers=DRAFT_LAYERS,
-                       d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
-                       vocab_size=256, max_seq_len=256)
+    BASE = _spec_bench_cfg(arch, DRAFT_LAYERS)
     DEEP = BASE.with_depth(TARGET_LAYERS)
     p_lens = np.array([16] + [8, 4, 12, 8, 4, 8, 12, 4, 8, 4, 12, 8, 4, 8,
                               12])
@@ -681,13 +707,15 @@ def bench_serve_spec(fast=False):
              f"({(spec['ttft_p50_s'] - base['ttft_p50_s']) * 1e3:+.1f});"
              f"ttft_p95_ms={spec['ttft_p95_s'] * 1e3:.1f}"
              f"({(spec['ttft_p95_s'] - base['ttft_p95_s']) * 1e3:+.1f})")
+    artifact = "BENCH_serve_spec.json" if arch == "dense" \
+        else f"BENCH_serve_spec_{arch}.json"
     if n_dev > 1:
-        with open("BENCH_serve_spec.json", "w") as f:
+        with open(artifact, "w") as f:
             json.dump(out, f, indent=1)
-        print("# wrote BENCH_serve_spec.json", flush=True)
+        print(f"# wrote {artifact}", flush=True)
     else:
         print("# single device only (jax initialized before "
-              "bench_serve_spec); BENCH_serve_spec.json left untouched — "
+              f"bench_serve_spec); {artifact} left untouched — "
               "run `--only serve_spec` for the mesh layout", flush=True)
 
 
@@ -863,11 +891,19 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--spec-arch", default="dense",
+                    choices=("dense", "mla", "mamba", "rwkv"),
+                    help="architecture for --only serve_spec (the serving "
+                         "matrix is closed: recurrent and MLA configs page, "
+                         "speculate and prefix-cache like dense)")
     args = ap.parse_args(argv)
     names = [args.only] if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for name in names:
-        BENCHES[name](fast=args.fast)
+        if name == "serve_spec":
+            BENCHES[name](fast=args.fast, arch=args.spec_arch)
+        else:
+            BENCHES[name](fast=args.fast)
 
 
 if __name__ == "__main__":

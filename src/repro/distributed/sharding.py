@@ -183,19 +183,19 @@ def cache_shardings(cache_specs, mesh: Mesh):
     longest remaining dim (sequence for KV, state dims for SSM) over 'model'.
     Leading super-block axis (dim 0) is never sharded.
 
-    Paged pool leaves (``k_pages``/``v_pages``; shape (n_super, num_pages,
-    block_size, KV, hd)) carry NO batch dim and any row may address any
-    page, so their page dim is deliberately replicated over the DP axes
-    (sharding it would turn every block-table gather into an all-to-all);
-    only the trailing dims are candidates for the 'model' axis, like a
-    contiguous cache's."""
+    Paged pool leaves (``k_pages``/``v_pages``, MLA ``latent_pages``; shape
+    (n_super, num_pages, block_size, ...)) carry NO batch dim and any row
+    may address any page, so their page dim is deliberately replicated over
+    the DP axes (sharding it would turn every block-table gather into an
+    all-to-all); only the trailing dims are candidates for the 'model'
+    axis, like a contiguous cache's."""
     sizes = dict(mesh.shape)
     dp = tuple(a for a in ("pod", "data") if a in sizes)
     dp_total = int(np.prod([sizes[a] for a in dp])) if dp else 1
 
     def one(path, leaf):
         names = _leaf_path_names(path)
-        paged = names and names[-1] in ("k_pages", "v_pages")
+        paged = names and names[-1] in ("k_pages", "v_pages", "latent_pages")
         shape = leaf.shape
         axes: list = [None] * len(shape)
         if not paged and dp and len(shape) >= 2 \

@@ -153,6 +153,44 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, ctx_len, *,
     return masked_gqa_attention(q, k, v, valid, logit_softcap)
 
 
+def paged_mla_attention_ref(q, latent_pages, block_table, valid, wkv_b,
+                            num_kv_heads: int, *, rotate_fn=None,
+                            latent_new=None, index=None,
+                            logit_softcap: float = 0.0, shard_fn=None):
+    """MLA attention through the block table: pages hold COMPRESSED
+    pre-RoPE latent rows ``(NP, bs, r)``, up-projected to K/V inside the
+    gather path.
+
+    q: (B, C, H, hd); valid: (B, C, S) with ``S = NB * bs``; wkv_b:
+    ``(r, 2 * KV * hd)`` up-projection.  ``rotate_fn`` (optional) applies
+    the caller's position encoding to the re-derived keys at their ABSOLUTE
+    slot positions ``0..S-1`` (the pages store pre-RoPE latents — MLA's
+    memory win — so keys re-derived from them must be rotated where they
+    live, exactly as the contiguous ``attn_decode`` MLA path does).
+    ``latent_new``/``index`` mirror the deferred-write decode path: the new
+    token's latent ``(B, r)`` is dense-selected into the gathered context at
+    slot ``index[b]`` BEFORE up-projection, so the pool commit can be
+    batched across layers like the standard K/V deferred path.  Returns
+    (B, C, H, hd).
+    """
+    B = q.shape[0]
+    lat = gather_pages(latent_pages, block_table).astype(q.dtype)
+    if shard_fn is not None:
+        lat = shard_fn(lat)
+    S = lat.shape[1]
+    if latent_new is not None:
+        at_new = (jnp.arange(S)[None, :] == index[:, None])[..., None]
+        lat = jnp.where(at_new, latent_new.astype(q.dtype)[:, None], lat)
+    kv = lat @ wkv_b                                       # (B, S, 2*KV*hd)
+    k, v = jnp.split(kv, 2, axis=-1)
+    hd = k.shape[-1] // num_kv_heads
+    k = k.reshape(B, S, num_kv_heads, hd)
+    v = v.reshape(B, S, num_kv_heads, hd)
+    if rotate_fn is not None:
+        k = rotate_fn(k)
+    return masked_gqa_attention(q, k, v, valid, logit_softcap)
+
+
 def masked_gqa_attention_per_query(q, k, v, valid, logit_softcap: float = 0.0):
     """Grouped-query attention where every query has its OWN key set.
 

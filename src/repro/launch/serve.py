@@ -32,6 +32,15 @@ prompts prefilled ``--chunk-len`` tokens per scheduler iteration straight
 into the pool, pages freed on EOS.  ``--no-overlap`` disables the
 scheduler's dispatch-then-fetch double buffering (debugging).
 
+The serving matrix is closed over the model registry: every architecture
+composes with ``--paged``, ``--prefix-cache`` and ``--spec-depth`` —
+dense and sliding-window attention page K/V rows, MLA pages its
+compressed ``(block, kv_lora_rank)`` latent rows (up-projected inside the
+paged-attention kernel), and recurrent blocks (mamba/rwkv) thread their
+states as B=1 carries with per-round checkpoint rings for speculative
+rollback and radix-tree carry snapshots for prefix hits.  Greedy streams
+stay byte-identical to contiguous solo generation in every combination.
+
 ``--prefix-cache`` (with ``--paged``) turns on the prefix-sharing radix
 cache (``train/radix_cache``): finished prompts publish their full KV
 pages into a radix tree keyed by token content, later requests whose
@@ -117,8 +126,10 @@ def main(argv=None):
     ap.add_argument("--eos", type=int, default=-1,
                     help="stop token id for --continuous (-1: disabled)")
     ap.add_argument("--paged", action="store_true",
-                    help="block-paged KV cache + chunked prefill "
-                         "(with --continuous)")
+                    help="block-paged KV cache + chunked prefill (with "
+                         "--continuous); every registry arch pages — dense/"
+                         "window K/V, MLA compressed latents, recurrent "
+                         "carries")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV page for --paged")
     ap.add_argument("--num-blocks", type=int, default=None,
@@ -130,13 +141,16 @@ def main(argv=None):
     ap.add_argument("--prefix-cache", action="store_true", default=False,
                     help="prefix-sharing radix cache over the page pool "
                          "(with --paged); synthetic requests then share a "
-                         "common system prefix")
+                         "common system prefix; window/recurrent archs "
+                         "match via published carry snapshots")
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false",
                     help="serve every prompt cold (default)")
     ap.add_argument("--spec-depth", type=int, default=None,
                     help="self-speculative decoding: draft = the served "
-                         "model truncated to this many layers (with --paged)")
+                         "model truncated to this many layers (with "
+                         "--paged); recurrent archs roll back via "
+                         "checkpoint rings")
     ap.add_argument("--gamma", type=int, default=4,
                     help="draft tokens proposed per speculation round")
     ap.add_argument("--draft-checkpoint", default=None,

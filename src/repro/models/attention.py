@@ -63,11 +63,16 @@ def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
     plus one trailing *trash* page (id ``num_blocks``) that free rows' block
     tables point at.  Rows address it through a ``(B, max_blocks)`` block
     table (``repro.train.kv_pool``), so a slot costs one page of residency
-    instead of a whole ``max_len`` row."""
+    instead of a whole ``max_len`` row.
+
+    MLA layers page their COMPRESSED pre-RoPE latent rows — one
+    ``(block_size, kv_lora_rank)`` page per block instead of two
+    ``(block_size, KV, hd)`` pages — and up-project to K/V inside the
+    paged-attention gather path (``ref.paged_mla_attention_ref``), so the
+    memory win MLA buys contiguously carries straight into the pool."""
     if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
-        raise NotImplementedError(
-            f"{cfg.name}: paged serving covers standard K/V attention; MLA "
-            "latent rows stay contiguous — serve with paged=False")
+        return {"latent_pages": jnp.zeros(
+            (num_blocks + 1, block_size, cfg.mla_kv_lora_rank), dtype)}
     kvh, hd = cfg.num_kv_heads, cfg.head_dim
     return {"k_pages": jnp.zeros((num_blocks + 1, block_size, kvh, hd), dtype),
             "v_pages": jnp.zeros((num_blocks + 1, block_size, kvh, hd), dtype)}
@@ -251,12 +256,42 @@ def attn_decode_paged(p, cfg: ModelConfig, x: jax.Array, cache, block_table,
     batches every layer's commit into ONE scatter per step, so the
     replicated pool costs O(1) collectives per step, not O(layers))."""
     from repro.kernels.paged_attention import ops as pa_ops
+    from repro.kernels.paged_attention import ref as paged_ref
     B = x.shape[0]
     cache_index = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (B,))
     bidx = jnp.arange(B)
-    q, k_new, v_new, _ = _project_qkv(p, cfg, x)
+    q, k_new, v_new, latent = _project_qkv(p, cfg, x)
     q, k_new = _qk_norm(p, cfg, q, k_new)
     q, k_new = _position_encode(cfg, q, k_new, positions)
+
+    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+        # Paged MLA: the pool stores compressed pre-RoPE latents; gather,
+        # dense-select the new token's latent at the cursor (deferred pool
+        # commit, batched across layers like the standard path), up-project
+        # and re-rotate inside the ref path.
+        lp = cache["latent_pages"]
+        bs = lp.shape[1]
+        trash = lp.shape[0] - 1
+        page = block_table[bidx, cache_index // bs]
+        if write_mask is not None:
+            page = jnp.where(write_mask, page, trash)
+        off = cache_index % bs
+        lat_new = latent[:, 0].astype(lp.dtype)
+        S = block_table.shape[1] * bs
+        valid = (jnp.arange(S)[None, :] <= cache_index[:, None])[:, None, :]
+        rot = None
+        if cfg.position == "rope":
+            rot = lambda k: apply_rope(k, jnp.arange(S)[None, :],
+                                       cfg.rope_theta)
+        out = paged_ref.paged_mla_attention_ref(
+            q, lp, block_table, valid, p["wkv_b"], cfg.num_kv_heads,
+            rotate_fn=rot, latent_new=lat_new, index=cache_index,
+            logit_softcap=cfg.attn_logit_softcap,
+            shard_fn=lambda t: maybe_shard(t, P(("pod", "data"), None, None)))
+        new_cache = {"latent_pages": lp,
+                     "pending": {"latent": lat_new, "page": page, "off": off}}
+        out = out.reshape(B, 1, cfg.q_dim) @ p["wo"]
+        return out, new_cache
 
     bs = cache["k_pages"].shape[1]
     trash = cache["k_pages"].shape[0] - 1
@@ -306,19 +341,42 @@ def attn_verify_chunk(p, cfg: ModelConfig, x: jax.Array, cache, index,
     ``spec_ring_commit`` applies each row's accepted prefix after the
     accept rule runs.
     """
-    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
-        raise NotImplementedError(
-            f"{cfg.name}: speculative verify covers standard K/V attention")
     from repro.kernels.paged_attention import ops as pa_ops
     from repro.kernels.paged_attention import ref as paged_ref
     B, C, _ = x.shape
     index = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (B,))
-    q, k_new, v_new, _ = _project_qkv(p, cfg, x)
+    q, k_new, v_new, latent = _project_qkv(p, cfg, x)
     q, k_new = _qk_norm(p, cfg, q, k_new)
     q, k_new = _position_encode(cfg, q, k_new, positions)
     pos = index[:, None] + jnp.arange(C)[None, :]              # (B, C)
 
-    if window <= 0:                              # paged pool layer
+    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+        if window > 0:
+            raise NotImplementedError(
+                f"{cfg.name}: MLA sliding-window rings are not served")
+        # Paged MLA verify: write the chunk's latents through the table
+        # (trash-redirected where masked) and attend through the compressed
+        # pool — rejected positions land beyond the rewound cursor exactly
+        # as standard K/V writes do, so rollback stays pure bookkeeping.
+        lp = cache["latent_pages"]
+        bs = lp.shape[1]
+        trash = lp.shape[0] - 1
+        page = jnp.take_along_axis(block_table, pos // bs, axis=1)
+        if write_mask is not None:
+            page = jnp.where(write_mask, page, trash)
+        off = pos % bs
+        lp = lp.at[page, off].set(latent.astype(lp.dtype))
+        new_cache = {"latent_pages": lp}
+        S = block_table.shape[1] * bs
+        valid = jnp.arange(S)[None, None, :] <= pos[:, :, None]   # (B, C, S)
+        rot = None
+        if cfg.position == "rope":
+            rot = lambda k: apply_rope(k, jnp.arange(S)[None, :],
+                                       cfg.rope_theta)
+        out = paged_ref.paged_mla_attention_ref(
+            q, lp, block_table, valid, p["wkv_b"], cfg.num_kv_heads,
+            rotate_fn=rot, logit_softcap=cfg.attn_logit_softcap)
+    elif window <= 0:                            # paged pool layer
         bs = cache["k_pages"].shape[1]
         trash = cache["k_pages"].shape[0] - 1
         page = jnp.take_along_axis(block_table, pos // bs, axis=1)
@@ -403,16 +461,36 @@ def attn_prefill_chunk(p, cfg: ModelConfig, x: jax.Array, cache, ctx_len,
     chunk token that maps there wins — ``_fill_cache``'s rule)."""
     from repro.kernels.paged_attention import ops as pa_ops
     from repro.kernels.paged_attention import ref as paged_ref
-    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
-        raise NotImplementedError(
-            f"{cfg.name}: chunked prefill covers standard K/V attention")
     B, C, _ = x.shape
     ctx_len = jnp.asarray(ctx_len, jnp.int32)
-    q, k_new, v_new, _ = _project_qkv(p, cfg, x)
+    q, k_new, v_new, latent = _project_qkv(p, cfg, x)
     q, k_new = _qk_norm(p, cfg, q, k_new)
     q, k_new = _position_encode(cfg, q, k_new, positions)
 
-    if window <= 0:                              # paged pool layer
+    if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+        if window > 0:
+            raise NotImplementedError(
+                f"{cfg.name}: MLA sliding-window rings are not served")
+        # Paged MLA chunk: latents written through the table, attention over
+        # the compressed pool (context + in-chunk triangle in one rule).
+        lp = cache["latent_pages"]
+        bs = lp.shape[1]
+        pos = ctx_len + jnp.arange(C)            # (C,) absolute slots
+        page = block_table[:, pos // bs]         # (B, C) physical pages
+        off = jnp.broadcast_to((pos % bs)[None], (B, C))
+        lp = lp.at[page, off].set(latent.astype(lp.dtype))
+        new_cache = {"latent_pages": lp}
+        S = block_table.shape[1] * bs
+        valid = jnp.arange(S)[None, None, :] <= pos[None, :, None]
+        valid = jnp.broadcast_to(valid, (B, C, S))
+        rot = None
+        if cfg.position == "rope":
+            rot = lambda k: apply_rope(k, jnp.arange(S)[None, :],
+                                       cfg.rope_theta)
+        out = paged_ref.paged_mla_attention_ref(
+            q, lp, block_table, valid, p["wkv_b"], cfg.num_kv_heads,
+            rotate_fn=rot, logit_softcap=cfg.attn_logit_softcap)
+    elif window <= 0:                            # paged pool layer
         bs = cache["k_pages"].shape[1]
         pos = ctx_len + jnp.arange(C)            # (C,) absolute slots
         page = block_table[:, pos // bs]         # (B, C) physical pages

@@ -115,7 +115,15 @@ def mamba_decode(p, cfg: ModelConfig, x: jax.Array, state) -> Tuple[jax.Array, d
     per-row — row b's new state depends only on row b's input and old state —
     so the serve decode step can freeze terminated rows with a per-row
     select and a scheduler can scatter a freshly prefilled row's state into
-    any batch slot without touching live rows."""
+    any batch slot without touching live rows.
+
+    Contract (speculative decoding): this function is the single source of
+    truth for the recurrent step.  ``transformer._verify_layer`` replays it
+    token-by-token under ``lax.scan`` from the pre-round state (collecting
+    per-step state checkpoints for the rollback index-select), and the
+    draft loop's (γ+2)-deep checkpoint ring snapshots its outputs — so
+    spec-vs-solo byte parity holds because both paths run these exact
+    ops."""
     B = x.shape[0]
     d_inner, dt_rank, d_state, d_conv = mamba_dims(cfg)
     xs, z = _mamba_project(p, cfg, x)                      # (B,1,d_inner)
@@ -258,7 +266,10 @@ def rwkv_init_state(cfg: ModelConfig, batch: int):
 def rwkv_decode(p, cfg: ModelConfig, x: jax.Array, state) -> Tuple[jax.Array, dict]:
     """Single-token RWKV layer step (time mix only; channel mix separate).
     x: (B,1,D).  Same per-row contract as ``mamba_decode``: the tm_x/wkv
-    state advance never mixes rows, so per-row freeze/scatter is exact."""
+    state advance never mixes rows, so per-row freeze/scatter is exact —
+    and the same spec-decode contract: verify replays this step (plus
+    ``rwkv_channel_mix_decode``) under ``lax.scan``, checkpointing states
+    per token for rollback."""
     B, _, D = x.shape
     H, hd = rwkv_dims(cfg)
     prev = state["tm_x"][:, None, :].astype(x.dtype)

@@ -452,27 +452,63 @@ def _verify_layer(lp, cache_l, cfg: ModelConfig, i: int, x, index, positions,
                   block_table, write_mask):
     """One layer over a (B, C) verify chunk at per-row offsets ``index``.
 
-    Attention-only: speculative verify needs per-row rollback, which block
-    tables (paged layers) and deferred ring commits (window layers) give;
-    recurrent mamba/rwkv states have no per-prefix rollback yet — the
-    engine gates those archs out of spec decoding."""
+    Attention layers score the chunk through block tables (paged) or
+    deferred ring commits (window).  Recurrent mamba/rwkv layers replay the
+    chunk as C single-token decode steps — the EXACT per-token decode math,
+    so the replay is bitwise identical to sequential decode — and
+    checkpoint the state after every step into ``pending["states"]``: a
+    (C+1)-deep checkpoint ring (entry 0 = the pre-round state) from which
+    :func:`lm_spec_commit` rewinds each row to its accepted length with one
+    index-select, O(γ·state) memory per layer."""
     kind = cfg.layer_kind(i)
-    if kind != "attn":
-        raise NotImplementedError(
-            f"speculative verify covers attention layers only (got {kind}); "
-            "recurrent-state rollback is an open item")
-    h = apply_norm(lp["ln1"], x, cfg.norm)
-    y, cache_l = attn.attn_verify_chunk(lp["attn"], cfg, h, cache_l, index,
-                                        positions, cfg.layer_window(i),
-                                        block_table=block_table,
-                                        write_mask=write_mask)
-    x = x + y
-    h = apply_norm(lp["ln2"], x, cfg.norm)
-    if cfg.layer_is_moe(i):
-        y, _ = mlp_mod.moe_apply(lp["moe"], cfg, h)
+    if kind == "attn":
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        y, cache_l = attn.attn_verify_chunk(lp["attn"], cfg, h, cache_l,
+                                            index, positions,
+                                            cfg.layer_window(i),
+                                            block_table=block_table,
+                                            write_mask=write_mask)
+        x = x + y
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        if cfg.layer_is_moe(i):
+            y, _ = mlp_mod.moe_apply(lp["moe"], cfg, h)
+        else:
+            y = mlp_mod.mlp_apply(lp["mlp"], cfg, h)
+        x = x + y
+    elif kind == "mamba":
+        def step(state, xt):
+            xt = xt[:, None, :]
+            h = apply_norm(lp["ln1"], xt, cfg.norm)
+            y, state = ssm_mod.mamba_decode(lp["mamba"], cfg, h, state)
+            xo = xt + y
+            if cfg.layer_is_moe(i):
+                h = apply_norm(lp["ln2"], xo, cfg.norm)
+                y, _ = mlp_mod.moe_apply(lp["moe"], cfg, h)
+                xo = xo + y
+            return state, (xo[:, 0], state)
+        _, (xs, states) = jax.lax.scan(step, cache_l, jnp.moveaxis(x, 1, 0))
+        x = jnp.moveaxis(xs, 0, 1)
+        cache_l = {"pending": {"states": jax.tree.map(
+            lambda s0, ss: jnp.concatenate([s0[None].astype(ss.dtype), ss], 0),
+            cache_l, states)}}
+    elif kind == "rwkv":
+        def step(state, xt):
+            xt = xt[:, None, :]
+            h = apply_norm(lp["ln1"], xt, cfg.norm)
+            y, state = ssm_mod.rwkv_decode(lp["rwkv_tm"], cfg, h, state)
+            xo = xt + y
+            h = apply_norm(lp["ln2"], xo, cfg.norm)
+            y, state = ssm_mod.rwkv_channel_mix_decode(lp["rwkv_tm"], cfg, h,
+                                                       state)
+            xo = xo + y
+            return state, (xo[:, 0], state)
+        _, (xs, states) = jax.lax.scan(step, cache_l, jnp.moveaxis(x, 1, 0))
+        x = jnp.moveaxis(xs, 0, 1)
+        cache_l = {"pending": {"states": jax.tree.map(
+            lambda s0, ss: jnp.concatenate([s0[None].astype(ss.dtype), ss], 0),
+            cache_l, states)}}
     else:
-        y = mlp_mod.mlp_apply(lp["mlp"], cfg, h)
-    x = x + y
+        raise ValueError(kind)
     x = maybe_shard(x, P(("pod", "data"), "model", None))
     return x, cache_l
 
@@ -517,17 +553,28 @@ def lm_verify(params, cfg: ModelConfig, tokens, cache, index, block_table,
 
 
 def lm_spec_commit(cache, index, acc):
-    """Resolve a verify forward's deferred window-ring advances: commit each
-    row's ``acc`` accepted tokens (``attn.spec_ring_commit``) and drop the
-    ``pending`` entries.  Paged pool leaves pass through — rejected
-    positions there live beyond the rewound cursor (never readable, always
-    rewritten first), so rollback costs them nothing."""
+    """Resolve a verify forward's deferred per-row advances: commit each
+    row's ``acc`` accepted tokens and drop the ``pending`` entries.  Window
+    layers commit their deferred ring writes (``attn.spec_ring_commit``);
+    recurrent layers index-select checkpoint ``acc`` from their replay's
+    (C+1)-deep state ring (entry 0 = pre-round, so ``acc == 0`` — an
+    inactive row — is an exact freeze).  Paged pool leaves pass through —
+    rejected positions there live beyond the rewound cursor (never
+    readable, always rewritten first), so rollback costs them nothing."""
+    acc = jnp.asarray(acc, jnp.int32)
+    rows = jnp.arange(acc.shape[0])
     out = {}
     for lname, lc in cache.items():
         if isinstance(lc, dict) and "pending" in lc:
-            k, v = attn.spec_ring_commit(lc["k"], lc["v"], lc["pending"]["k"],
-                                         lc["pending"]["v"], index, acc)
-            out[lname] = {"k": k, "v": v}
+            pend = lc["pending"]
+            if "states" in pend:
+                # Leaves (n_super, C+1, B, ...): out[s, b] = ck[s, acc[b], b].
+                out[lname] = jax.tree.map(lambda ck: ck[:, acc, rows],
+                                          pend["states"])
+            else:
+                k, v = attn.spec_ring_commit(lc["k"], lc["v"], pend["k"],
+                                             pend["v"], index, acc)
+                out[lname] = {"k": k, "v": v}
         else:
             out[lname] = lc
     return out
@@ -538,7 +585,7 @@ def _decode_layer(lp, cache_l, cfg: ModelConfig, i: int, x, index, positions,
     kind = cfg.layer_kind(i)
     if kind == "attn":
         h = apply_norm(lp["ln1"], x, cfg.norm)
-        if "k_pages" in cache_l:
+        if "k_pages" in cache_l or "latent_pages" in cache_l:
             y, cache_l = attn.attn_decode_paged(lp["attn"], cfg, h, cache_l,
                                                 block_table, index, positions,
                                                 write_mask=write_mask)
@@ -583,6 +630,12 @@ def _commit_paged_writes(cache):
     for lname, lc in cache.items():
         if isinstance(lc, dict) and "pending" in lc:
             pend = lc["pending"]
+            if "latent" in pend:        # MLA: one compressed row per token
+                sup = jnp.arange(lc["latent_pages"].shape[0])[:, None]
+                out[lname] = {
+                    "latent_pages": lc["latent_pages"].at[
+                        sup, pend["page"], pend["off"]].set(pend["latent"])}
+                continue
             sup = jnp.arange(lc["k_pages"].shape[0])[:, None]   # (n_super, 1)
             out[lname] = {
                 "k_pages": lc["k_pages"].at[sup, pend["page"],

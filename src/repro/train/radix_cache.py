@@ -38,9 +38,12 @@ host-side index that finds the pages:
   * **evict** — the tree holds pages only as long as memory is cheap:
     when the free list runs dry, the pool calls back (``evict_one``) and
     the least-recently-used *leaf* whose page has no row references is
-    unpinned (interior nodes follow as their subtrees drain).  Pages a
-    live row references are never evictable, so in-flight matches are
-    safe by construction.
+    unpinned (interior nodes follow as their subtrees drain).  A
+    pinned-only interior node stranded above row-referenced descendants
+    (possible after publish dedup) is reclaimed with its whole subtree,
+    so every page the pool's admission math counted evictable is actually
+    reclaimable.  Pages a live row references are never freed, so
+    in-flight matches are safe by construction.
 """
 from __future__ import annotations
 
@@ -148,18 +151,29 @@ class RadixCache:
             node = child
         return path
 
-    def match(self, prompt, carryless: bool) -> Optional[PrefixMatch]:
+    def match(self, prompt, carryless: bool,
+              max_pages: Optional[int] = None) -> Optional[PrefixMatch]:
         """Look up ``prompt``; returns the admission-ready match or None.
 
         ``carryless`` configs (every non-paged layer carries nothing)
         restore no state and may match any depth — including the whole
         prompt, where the last page goes copy-on-write and a one-token
-        rerun at P-1 recovers the first-token logits.  Carry configs clamp
-        to the deepest snapshot-bearing node strictly below P (the tail
-        must re-run at least one real token; re-running a token already in
-        a window ring would double-write it)."""
+        rerun at P-1 recovers the first-token logits.  Carry configs
+        (window rings / recurrent states) clamp to the deepest
+        snapshot-bearing node strictly below P (the tail must re-run at
+        least one real token; re-running a token already in a window ring
+        would double-write it, and a recurrent state cannot be rewound
+        mid-page).
+
+        ``max_pages`` caps the match depth: the scheduler re-clamps an
+        inadmissible hit shallower (a full match can charge MORE capacity
+        than a cold admission — matched pinned-only pages stop being
+        evictable) until ``can_admit_prefix`` passes.  Carry configs
+        re-clamp to the next-shallower snapshot node automatically."""
         P = len(prompt)
         path = self._walk(prompt)
+        if max_pages is not None:
+            path = path[:max(max_pages, 0)]
         if carryless:
             m = len(path)
             if m == 0:
@@ -221,24 +235,62 @@ class RadixCache:
     # -- evict (KVBlockPool.evictor protocol) -------------------------------
 
     def evict_one(self) -> bool:
-        """Unpin the least-recently-used leaf whose page has no row
-        references (freeing it), dropping the node (and its carry
-        snapshot's device buffers).  Returns False when nothing in the
-        tree is evictable — the pool then raises ``PoolExhausted``."""
-        victim = None
+        """Reclaim pinned-only tree pages; returns False when nothing in
+        the tree is evictable — the pool then raises ``PoolExhausted``.
+
+        Preferred victim: the least-recently-used CHILDLESS leaf whose
+        page has no row references — unpinning frees exactly that page
+        and no other request loses a deeper match than necessary.  When
+        no such leaf exists the evictor must still uphold the pool's
+        admission guarantee (``can_admit*`` counts EVERY pinned-only page
+        as reclaimable): first-publisher dedup can leave a pinned-only
+        INTERIOR node whose child's page is row-referenced — the later
+        publisher kept its own private copy of the parent span, so the
+        child is row-referenced while the parent is not, and no childless
+        leaf is evictable.  Fallback: drop the LRU evictable node WITH
+        its whole subtree — the subtree pages are merely unpinned
+        (row-referenced ones stay allocated until their rows free), the
+        victim's own page is guaranteed to free, and matches through the
+        removed path simply miss afterwards.
+
+        In-flight carry matches are eviction-safe by construction: a
+        carry match returns ``pages = path[:d]`` with the snapshot node at
+        ``path[d-1]``, so the admitted row's table references the
+        snapshot-bearing page until ``free_slot`` — ``is_evictable`` is
+        False for it, and eviction (which only runs inside page
+        allocation, after ``admit_prefix`` took those references) can
+        never FREE it; the fallback may drop its tree node, but the
+        restored carry itself is handed out as a device COPY
+        (``ServeEngine._carry_copy_jit``) before any allocation runs, so
+        dropping a node's snapshot buffers cannot invalidate an admitted
+        row's state.  Locked in by tests/test_serving_prefix.py::
+        test_eviction_never_claims_inflight_carry_pages."""
+        victim, fallback = None, None
 
         def walk(n):
-            nonlocal victim
+            nonlocal victim, fallback
             for c in n.children.values():
+                if self.pool.is_evictable(c.page):
+                    if not c.children and \
+                            (victim is None
+                             or c.last_used < victim.last_used):
+                        victim = c
+                    if fallback is None \
+                            or c.last_used < fallback.last_used:
+                        fallback = c
                 if c.children:
                     walk(c)
-                elif self.pool.is_evictable(c.page) and \
-                        (victim is None or c.last_used < victim.last_used):
-                    victim = c
         walk(self.root)
         if victim is None:
+            victim = fallback
+        if victim is None:
             return False
-        self.pool.unpin(victim.page)
+
+        def drop(n):
+            for c in list(n.children.values()):
+                drop(c)
+            self.pool.unpin(n.page)
+            self.evicted_pages += 1
+        drop(victim)
         del victim.parent.children[victim.key]
-        self.evicted_pages += 1
         return True

@@ -53,10 +53,14 @@ discipline.  The contract:
     and — for a function-preserving ``copying_zeroL`` expansion —
     accepts at rate 1.0 by construction.  Rollback of rejected proposals is per-row
     cursor rewind + ``KVBlockPool.truncate_row`` page release (pages
-    never move); draft window rings restore from a per-round snapshot.
+    never move); draft window rings restore from a per-round snapshot and
+    recurrent mamba/rwkv states rewind by index-select from a (γ+2)-deep
+    per-step checkpoint ring kept inside the fused draft/verify steps.
     Greedy spec-decoded streams are byte-identical to non-speculative
-    greedy decode.  Attention-only archs (dense / sliding-window):
-    recurrent mamba/rwkv states have no per-prefix rollback yet.
+    greedy decode.  Every registry architecture is served: dense /
+    GQA / sliding-window / softcap / MoE attention, MLA (compressed
+    latent pages, up-projected inside the paged-attention read), and
+    recurrent mamba / rwkv.
 """
 from __future__ import annotations
 
@@ -199,10 +203,6 @@ class ServeEngine:
             raise NotImplementedError(
                 f"{cfg.name}: arch has no prefill path; ServeEngine supports "
                 "decoder-only archs (transformer / ssm / rwkv6)")
-        if paged and cfg.attention == "mla" and cfg.mla_kv_lora_rank:
-            raise NotImplementedError(
-                f"{cfg.name}: paged serving covers standard K/V attention; "
-                "MLA latent rows stay contiguous — serve with paged=False")
         self.mesh = mesh if mesh is not None else mesh_lib.single_device_mesh()
         self.max_len = max_len
         self.cache_dtype = cache_dtype
@@ -225,17 +225,10 @@ class ServeEngine:
         self.spec_decode = spec_decode
         self.gamma = gamma
         self.prefix_cache = prefix_cache
-        if prefix_cache:
-            if not paged:
-                raise ValueError("prefix_cache requires paged=True (shared "
-                                 "prefixes are shared POOL PAGES mapped "
-                                 "through block tables)")
-            kinds = {cfg.layer_kind(i) for i in range(cfg.pattern_period)}
-            if kinds - {"attn"}:
-                raise NotImplementedError(
-                    f"{cfg.name}: prefix_cache covers attention-only archs; "
-                    f"recurrent {sorted(kinds - {'attn'})} states have no "
-                    "mid-prompt snapshot/restore yet")
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache requires paged=True (shared "
+                             "prefixes are shared POOL PAGES mapped "
+                             "through block tables)")
         # Empty-carry configs (every layer paged full attention) restore no
         # state on a hit and may match at any page depth — including the
         # exact-boundary COW rerun; window configs clamp matches to carry
@@ -267,13 +260,8 @@ class ServeEngine:
                              "rejected drafts is block-table cursor rewind)")
         if self.gamma < 1:
             raise ValueError(f"gamma {self.gamma} < 1")
-        kinds = {cfg.layer_kind(i) for i in range(cfg.pattern_period)}
-        if kinds - {"attn"}:
-            raise NotImplementedError(
-                f"{cfg.name}: spec_decode covers attention-only archs; "
-                f"recurrent {sorted(kinds - {'attn'})} states have no "
-                "per-prefix rollback yet")
-        windows = [cfg.layer_window(i) for i in range(cfg.pattern_period)]
+        windows = [cfg.layer_window(i) for i in range(cfg.pattern_period)
+                   if cfg.layer_kind(i) == "attn"]
         if any(0 < w < self.gamma + 1 for w in windows):
             raise ValueError(
                 f"gamma {self.gamma} + 1 draft writes exceed sliding window "
@@ -586,23 +574,34 @@ class ServeEngine:
             replicated=self._replicated)
         row_sh = shd.cache_shardings(row_struct, self.mesh)
         # Draft sliding-window rings need a pre-round snapshot (an output
-        # of the fused draft loop) + post-accept restore; full-attention
-        # draft leaves roll back by cursor alone.
-        ring_layers = tuple(f"layer{i}" for i in range(dcfg.pattern_period)
-                            if dcfg.layer_window(i) > 0) \
-            if cache_struct else ()
+        # of the fused draft loop) + post-accept restore; recurrent
+        # mamba/rwkv layers need the loop's (γ+2)-deep per-step state
+        # checkpoints + post-accept index-select; full-attention draft
+        # leaves roll back by cursor alone.
+        ring_layers, rec_layers = (), ()
+        if cache_struct:
+            ring_layers = tuple(
+                f"layer{i}" for i in range(dcfg.pattern_period)
+                if dcfg.layer_kind(i) == "attn" and dcfg.layer_window(i) > 0)
+            rec_layers = tuple(
+                f"layer{i}" for i in range(dcfg.pattern_period)
+                if dcfg.layer_kind(i) != "attn")
         draft = steps_lib.make_draft_loop_step(
             dcfg, self.gamma, sample=sample, shardings=dsh,
-            ring_layers=ring_layers)
+            ring_layers=ring_layers, rec_layers=rec_layers)
         scatter = steps_lib.make_row_scatter_step(
             shardings=dsh, row_cache_shardings=row_sh)
         init_cache = jax.jit(init_cache_fn, out_shardings=dsh.cache)
         init_row = jax.jit(init_row_fn, out_shardings=row_sh)
         rollback = None
-        if ring_layers:
+        if ring_layers or rec_layers:
+            r = self._replicated
             ring_sh = {ln: dsh.cache[ln] for ln in ring_layers}
+            ring_sh.update({ln: jax.tree.map(lambda _: r, dsh.cache[ln])
+                            for ln in rec_layers})
             rollback = steps_lib.make_draft_rollback_step(
-                dcfg, self.gamma, shardings=dsh, ring_shardings=ring_sh)
+                dcfg, self.gamma, shardings=dsh, ring_shardings=ring_sh,
+                rec_layers=rec_layers)
         bundle = (draft, verify, rollback, scatter, init_cache, init_row,
                   dsh, row_sh)
         self._spec_built[key] = bundle
@@ -663,15 +662,16 @@ class ServeEngine:
                     eos_id: int = -1):
         """One SPECULATION round over all slots: γ masked draft steps
         propose, ONE target verify forward scores/accepts/commits, draft
-        rings roll back to the accepted prefix.
+        rings and recurrent states roll back to the accepted prefix.
 
         Returns ``(state, out_tokens (B, γ+1) device, acc (B,) device)`` —
         row b emitted ``acc[b]`` tokens, ``out_tokens[b, :acc[b]]``
         (inactive rows emit 0 tokens).  The caller rewinds its host
         cursors by ``acc`` and releases pages past the new cursor
         (``state.pool.truncate_row``); the device-side rollback already
-        happened in here (verify ring commit + draft ring restore — the
-        paged pool needs none)."""
+        happened in here (verify ring commit, draft ring restore, and
+        index-selects from the per-step recurrent-state checkpoint rings —
+        the paged pool needs none)."""
         state = self._sync_table(state)
         draft, verify, rollback, _, _, _, _, _ = self._spec_steps(
             state.batch, temperature, state.pool.num_blocks)
@@ -848,16 +848,19 @@ class ServeEngine:
             self._pagecopy_built[key] = steps_lib.make_page_copy_step(sh)
         return self._pagecopy_built[key]
 
-    def prefix_match(self, state: ContinuousState, prompt):
+    def prefix_match(self, state: ContinuousState, prompt, max_pages=None):
         """Radix-tree lookup for an arriving prompt (None off a prefix-
         cache engine, or on a miss).  The result feeds
         ``pool.can_admit_prefix`` (scheduler preflight) and
         :meth:`begin_prefill`; between those two host calls nothing can
-        evict the matched pages (eviction only runs inside allocation)."""
+        evict the matched pages (eviction only runs inside allocation).
+        ``max_pages`` caps the match depth — the scheduler re-clamps an
+        inadmissible hit shallower until it fits (see ``RadixCache.match``)."""
         if state.radix is None:
             return None
         prompt = np.asarray(prompt, np.int32).ravel()
-        return state.radix.match(prompt, self._carry_empty)
+        return state.radix.match(prompt, self._carry_empty,
+                                 max_pages=max_pages)
 
     def begin_prefill(self, state: ContinuousState, row: int, prompt,
                       max_new_tokens: int, chunk_len: Optional[int] = None,

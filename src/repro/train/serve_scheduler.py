@@ -51,7 +51,12 @@ commitment can wait unboundedly.  Once the OLDEST arrived request has
 waited longer than ``admission_age_s``, later arrivals stop jumping it —
 admission blocks until the head's worst-case pages fit (commitments drain
 monotonically as live requests finish, so the head is then guaranteed to
-admit).  None (default) keeps pure first-fit.
+admit).  None (default) keeps pure first-fit.  The aging preflight is
+prefix-aware: a head with a radix-cache hit is charged its tail-only need
+(``can_admit_prefix``), re-clamped shallower when the full-depth hit
+cannot fit — a fully-cached head whose matched pages exhaust the pool's
+evictable capacity must fall back to a shallower (or cold) admission
+rather than block forever on a need no commitment drain can satisfy.
 
 Greedy decoding is deterministic per request: a request's token stream is
 byte-identical to running it alone through ``ServeEngine.generate``
@@ -340,6 +345,23 @@ class ContinuousScheduler:
                     ok = state.pool.can_admit(need) if match is None else \
                         state.pool.can_admit_prefix(need, match.pages,
                                                     match.cow_last)
+                    # A deep hit can charge MORE than a cold admission:
+                    # matched pinned-only pages stop being evictable, so a
+                    # fully-cached request in a tight pool may be
+                    # inadmissible at full depth while a shallower match
+                    # (or cold, with the evictor reclaiming pins on
+                    # demand) fits NOW.  Re-clamp until it fits — carry
+                    # configs re-clamp to the next snapshot node — else an
+                    # aged head would block admission forever on a need no
+                    # commitment drain can satisfy (deadlock; see
+                    # test_fully_cached_head_never_deadlocks_admission).
+                    while not ok and match is not None:
+                        match = engine.prefix_match(
+                            state, req.prompt,
+                            max_pages=len(match.pages) - 1)
+                        ok = state.pool.can_admit(need) if match is None \
+                            else state.pool.can_admit_prefix(
+                                need, match.pages, match.cow_last)
                     if not ok:
                         if skip == 0 and self.admission_age_s is not None \
                                 and now - req.arrival_s \

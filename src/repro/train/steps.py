@@ -237,11 +237,11 @@ def make_prefill_step(cfg: ModelConfig, sample: bool = False,
 
 
 def _is_paged_leaf(path) -> bool:
-    """Paged pool leaves (k_pages/v_pages) have no batch dim: per-row
-    freeze/scatter logic must skip them (their per-row no-op is the trash-
-    page write redirect inside ``attn_decode_paged``)."""
-    return any(str(getattr(p, "key", "")) in ("k_pages", "v_pages")
-               for p in path)
+    """Paged pool leaves (k_pages/v_pages, MLA latent_pages) have no batch
+    dim: per-row freeze/scatter logic must skip them (their per-row no-op is
+    the trash-page write redirect inside ``attn_decode_paged``)."""
+    return any(str(getattr(p, "key", ""))
+               in ("k_pages", "v_pages", "latent_pages") for p in path)
 
 
 def make_serve_decode_step(cfg: ModelConfig, sample: bool = False,
@@ -355,7 +355,7 @@ def make_serve_decode_step(cfg: ModelConfig, sample: bool = False,
 
 def make_draft_loop_step(cfg: ModelConfig, gamma: int, sample: bool = False,
                          shardings: Optional[ServeShardings] = None,
-                         ring_layers=()) -> Callable:
+                         ring_layers=(), rec_layers=()) -> Callable:
     """The WHOLE draft loop of one speculation round in ONE executable:
     γ+1 masked draft decode steps under ``lax.scan``.
 
@@ -379,8 +379,14 @@ def make_draft_loop_step(cfg: ModelConfig, gamma: int, sample: bool = False,
     Like the masked serve decode step, inactive rows are exact no-ops —
     but there is NO eos/limit termination: the draft proposes
     unconditionally and the verify step owns termination.
-    ``ring_snapshot`` is the pre-round state of the ``ring_layers`` ring
-    buffers ({} when none), consumed by ``make_draft_rollback_step``."""
+    ``ring_snapshot`` is the pre-round rollback state ({} when none),
+    consumed by ``make_draft_rollback_step``: for ``ring_layers`` the ring
+    buffers as of round start; for ``rec_layers`` (mamba/rwkv) a
+    (γ+2)-deep per-step checkpoint ring of the layer's recurrent state —
+    entry 0 is the pre-round state, entry j the state after draft step j —
+    so rewinding a row to its accepted length is one index-select
+    (O(γ·state) memory, the recurrent mirror of the window-ring
+    deferred-commit pattern)."""
     api = registry.get_model(cfg)
     if gamma < 1:
         raise ValueError(f"gamma {gamma} < 1")
@@ -388,6 +394,7 @@ def make_draft_loop_step(cfg: ModelConfig, gamma: int, sample: bool = False,
     def run(params, tokens, cache, index, active, temp, key):
         snap = {ln: {k: cache[ln][k] for k in ("k", "v")}
                 for ln in ring_layers}
+        rec_pre = {ln: cache[ln] for ln in rec_layers}
 
         def body(carry, _):
             tok, cache, idx, key = carry
@@ -408,12 +415,20 @@ def make_draft_loop_step(cfg: ModelConfig, gamma: int, sample: bool = False,
             if sample:
                 ys += (jax.nn.softmax(last.astype(jnp.float32) / temp,
                                       axis=-1),)
+            if rec_layers:
+                ys += ({ln: cache[ln] for ln in rec_layers},)
             return (nxt[:, None], cache, idx + active.astype(idx.dtype),
                     key), ys
 
         (_, cache, _, key), ys = jax.lax.scan(
             body, (tokens, cache, index, key), None, length=gamma + 1)
         vt = jnp.moveaxis(ys[0], 0, 1)                  # (B, γ+1) inputs
+        if rec_layers:
+            # (γ+2, n_super, B, ...) checkpoint leaves: pre-round + per-step.
+            snap = {**snap, **jax.tree.map(
+                lambda pre, st: jnp.concatenate(
+                    [pre[None].astype(st.dtype), st], axis=0),
+                rec_pre, {ln: ys[-1][ln] for ln in rec_layers})}
         if sample:
             probs = jnp.moveaxis(ys[1][:gamma], 0, 1)   # (B, γ, V)
             return vt, probs, cache, snap, key
@@ -430,6 +445,10 @@ def make_draft_loop_step(cfg: ModelConfig, gamma: int, sample: bool = False,
         return jax.jit(fn, donate_argnums=donate)
     r = shardings.replicated
     ring_sh = {ln: shardings.cache[ln] for ln in ring_layers}
+    # Recurrent checkpoints carry an extra leading (γ+2) axis the cache
+    # shardings don't describe; the states are O(γ·state) — replicate them.
+    ring_sh.update({ln: jax.tree.map(lambda _: r, shardings.cache[ln])
+                    for ln in rec_layers})
     ins = (shardings.params, shardings.tokens, shardings.cache, r, r) \
         + ((r,) if sample else ()) + (r,)
     outs = (shardings.tokens,) + ((shardings.logits,) if sample else ()) \
@@ -565,20 +584,24 @@ def make_verify_step(cfg: ModelConfig, gamma: int, sample: bool = False,
 
 def make_draft_rollback_step(cfg: ModelConfig, gamma: int,
                              shardings: Optional[ServeShardings] = None,
-                             ring_shardings=None) -> Callable:
+                             ring_shardings=None, rec_layers=()) -> Callable:
     """(draft_cache, ring_snapshot, index, acc) -> draft_cache.
 
-    Rolls the draft's sliding-window rings back to the verify's accepted
-    prefix.  The draft loop wrote γ+1 positions ``index .. index+γ`` into
-    its rings in place (γ proposal steps plus the cache-fill step for the
-    last proposal); entries whose latest write was a REJECTED position
-    (offset ``r`` in [acc, γ]) are restored from the pre-round snapshot —
-    with γ+1 <= W each slot was written at most once, so the snapshot
-    value is exactly the entry a sequential decode rolled back to
-    ``index+acc`` would hold.  Full-attention draft leaves need nothing:
-    their slots past the rewound cursor are invalid until rewritten.
-    Inactive rows (``acc == 0``) had every draft write frozen, so
-    restore == no-op."""
+    Rolls the draft's per-row state back to the verify's accepted prefix.
+    Sliding-window rings: the draft loop wrote γ+1 positions ``index ..
+    index+γ`` into its rings in place (γ proposal steps plus the cache-fill
+    step for the last proposal); entries whose latest write was a REJECTED
+    position (offset ``r`` in [acc, γ]) are restored from the pre-round
+    snapshot — with γ+1 <= W each slot was written at most once, so the
+    snapshot value is exactly the entry a sequential decode rolled back to
+    ``index+acc`` would hold.  Recurrent ``rec_layers`` (mamba/rwkv): the
+    snapshot is the draft loop's (γ+2)-deep per-step checkpoint ring;
+    row b's state becomes checkpoint ``acc[b]`` (entry 0 = pre-round) — the
+    state a sequential decode of exactly the accepted tokens would carry.
+    Full-attention draft leaves need nothing: their slots past the rewound
+    cursor are invalid until rewritten.  Inactive rows (``acc == 0``) had
+    every draft write frozen, so restore == no-op (recurrent rows select
+    the pre-round checkpoint, which equals their frozen state)."""
     windows = [cfg.layer_window(i) for i in range(cfg.pattern_period)
                if cfg.layer_kind(i) == "attn"]
     if any(0 < w < gamma + 1 for w in windows):
@@ -586,12 +609,20 @@ def make_draft_rollback_step(cfg: ModelConfig, gamma: int,
             f"gamma {gamma} + 1 draft writes exceed a sliding window "
             f"{min(w for w in windows if w > 0)}: a speculation round may "
             "not overwrite a draft ring slot twice")
+    rec_set = frozenset(rec_layers)
 
     def fn(cache, snap, index, acc):
         out = {}
+        rows = jnp.arange(acc.shape[0])
         for lname, lc in cache.items():
             if lname not in snap:
                 out[lname] = lc
+                continue
+            if lname in rec_set:
+                # Leaves (γ+2, n_super, B, ...) -> pick ck[acc[b], s, b].
+                out[lname] = jax.tree.map(
+                    lambda ck: jnp.moveaxis(ck, 0, 1)[:, acc, rows],
+                    snap[lname])
                 continue
             W = jax.tree.leaves(snap[lname])[0].shape[2]
             r = (jnp.arange(W)[None, :] - index[:, None]) % W   # (B, W)

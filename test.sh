@@ -15,6 +15,10 @@
 #   bash test.sh --prefix-smoke       # fast lane: prefix-sharing radix cache
 #                                     # (share/COW/evict parity, refcount
 #                                     # fuzz) single-device subset
+#   bash test.sh --recurrent-smoke    # fast lane: mamba/rwkv through paged +
+#                                     # spec-decode (checkpoint-ring rollback)
+#                                     # + prefix carry snapshots, plus the
+#                                     # carry-lane pool fuzz
 #
 # Test deps are declared in requirements-test.txt (pytest + hypothesis for
 # the pool property fuzz; a seeded fallback generator runs when hypothesis
@@ -41,6 +45,13 @@ if [[ "${1:-}" == "--prefix-smoke" ]]; then
   shift
   set -- tests/test_serving_prefix.py tests/test_serving_paged.py -k \
       "prefix or radix or pool or cow" -m "not slow" "$@"
+fi
+
+if [[ "${1:-}" == "--recurrent-smoke" ]]; then
+  shift
+  set -- tests/test_serving_paged.py tests/test_serving_spec.py \
+      tests/test_serving_prefix.py -k \
+      "mamba or rwkv or carry or recurrent" -m "not slow" "$@"
 fi
 
 if ! python -c "import hypothesis" 2>/dev/null; then

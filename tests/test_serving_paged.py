@@ -44,8 +44,10 @@ CFG_RWKV = ModelConfig(name="pg-rwkv", family="ssm", num_layers=4,
                        position="none", norm="layernorm",
                        block_pattern=("rwkv",),
                        ssm=SSMConfig(kind="rwkv6", head_dim=16))
+CFG_MLA = dataclasses.replace(CFG_DENSE, name="pg-mla", attention="mla",
+                              mla_kv_lora_rank=8)
 ARCH_CFGS = {"dense": CFG_DENSE, "window": CFG_WINDOW, "mamba": CFG_MAMBA,
-             "rwkv": CFG_RWKV}
+             "rwkv": CFG_RWKV, "mla": CFG_MLA}
 
 REQ_SHAPES = ((5, 7), (9, 4), (3, 10), (6, 2), (4, 8), (7, 5), (2, 6),
               (8, 3))
@@ -302,17 +304,24 @@ def test_pool_fuzz_poisson_arrivals_and_eos():
             _drive_pool(events, int(rng.integers(2, 13)))
 
 
-def _drive_pool_prefix(events, num_blocks):
+def _drive_pool_prefix(events, num_blocks, carryless=True):
     """Fuzz the refcount/COW/pin surface: a real ``RadixCache`` over the
     pool, prompts drawn from a 2-token alphabet so prefixes collide
     constantly.  Each event ``(row, p, tseed, g, e, spec, deep)``
     interleaves prefix-hit admission (shared page mapping, exact-boundary
-    copy-on-write), publish (tree pins), speculative rollback,
-    ``deep``-truncation below the shared boundary, free-with-refs, and LRU
-    eviction whenever the free list runs dry.  ``check_invariants`` after
-    every op asserts refcount == table refs + tree pins, no shared page on
-    the free list, and the starvation guarantee; COW is additionally
-    checked to never touch a page with other references."""
+    copy-on-write), publish (tree pins), speculative rollback
+    (``truncate_row`` at every spec-th decode token — the PR 5 cycle, now
+    interleaved with live prefix shares), ``deep``-truncation below the
+    shared boundary, free-with-refs, and LRU eviction whenever the free
+    list runs dry.  ``carryless=False`` drives the window/recurrent
+    publish-and-match surface instead of the dense one: publishers attach
+    a carry snapshot at the last page boundary below P, matchers clamp to
+    snapshot-bearing nodes (asserting the restored carry's extent equals
+    the skip), and inadmissible hits re-clamp shallower exactly like the
+    scheduler.  ``check_invariants`` after every op asserts refcount ==
+    table refs + tree pins, no shared page on the free list, and the
+    starvation guarantee; COW is additionally checked to never touch a
+    page with other references."""
     pool = KVBlockPool(num_blocks=num_blocks, block_size=4, batch=6,
                        max_blocks=8)
     radix = RadixCache(pool)
@@ -329,9 +338,18 @@ def _drive_pool_prefix(events, num_blocks):
         if need > min(pool.num_blocks, pool.max_blocks):
             continue
         limit = p + g - 1
-        match = radix.match(prompt, carryless=True)
-        if match is not None and pool.can_admit_prefix(
+        match = radix.match(prompt, carryless=carryless)
+        while match is not None and not pool.can_admit_prefix(
                 need, match.pages, match.cow_last):
+            # scheduler-mirror: re-clamp an inadmissible hit shallower
+            match = radix.match(prompt, carryless=carryless,
+                                max_pages=len(match.pages) - 1)
+        if match is not None:
+            if not carryless:
+                # carry matches clamp to a snapshot node: the restored
+                # carry was taken at exactly ``skip`` tokens
+                assert match.carry["extent"] == match.skip
+                assert match.skip <= p - 1
             refs = {pg: pool.ref_count(pg) for pg in match.pages}
             cow = pool.admit_prefix(row, p, g, match.pages, match.cow_last)
             if match.cow_last:
@@ -342,7 +360,7 @@ def _drive_pool_prefix(events, num_blocks):
                 assert pool.ref_count(src) == refs[src]
                 assert pool.ref_count(dst) == 1
             start = match.skip
-        elif match is None and pool.can_admit(need):
+        elif pool.can_admit(need):
             pool.admit(row, p, g)
             start = 0
         else:
@@ -350,8 +368,15 @@ def _drive_pool_prefix(events, num_blocks):
         pool.check_invariants()
         pool.advance(row, p)             # tail prefill (never raises)
         n_pub = p // pool.block_size
-        if n_pub:
+        if n_pub and carryless:
             radix.publish(prompt, pool.row_pages(row)[:n_pub], n_pub)
+        elif n_pub:
+            # window/recurrent publishers: carry snapshot at the last page
+            # boundary at/below P-1 (what ServeEngine.begin_prefill does)
+            snap_at = ((p - 1) // pool.block_size) * pool.block_size
+            radix.publish(prompt, pool.row_pages(row)[:n_pub], n_pub,
+                          carry={"extent": snap_at} if snap_at else None,
+                          carry_tokens=snap_at)
         pool.check_invariants()
         tokens = min(p + max(0, g - 1 - e), limit)
         for t in range(p + 1, tokens + 1):
@@ -377,9 +402,13 @@ def _drive_pool_prefix(events, num_blocks):
     assert pool.committed_blocks == 0
 
 
-def test_pool_fuzz_prefix_share_cow_evict():
-    """Random share/COW/publish/evict churn against the refcounted pool +
-    radix tree contract (see ``_drive_pool_prefix``); hypothesis when
+@pytest.mark.parametrize("carryless", [True, False],
+                         ids=["dense", "carry"])
+def test_pool_fuzz_prefix_share_cow_evict(carryless):
+    """Random share/COW/publish/evict churn — with spec truncate_row
+    rollbacks interleaved — against the refcounted pool + radix tree
+    contract (see ``_drive_pool_prefix``); the ``carry`` lane drives the
+    window/recurrent snapshot publish-and-clamp surface.  Hypothesis when
     installed, else 60 seeded event tapes over the same property."""
     if HAVE_HYPOTHESIS:
         from hypothesis import given, settings, strategies as st
@@ -395,7 +424,7 @@ def test_pool_fuzz_prefix_share_cow_evict():
                         min_size=1, max_size=60),
                st.integers(2, 12))
         def run(events, num_blocks):
-            _drive_pool_prefix(events, num_blocks)
+            _drive_pool_prefix(events, num_blocks, carryless=carryless)
 
         run()
     else:
@@ -406,7 +435,8 @@ def test_pool_fuzz_prefix_share_cow_evict():
                        int(rng.integers(0, 10)), int(rng.integers(0, 5)),
                        bool(rng.integers(0, 2)))
                       for _ in range(int(rng.integers(1, 61)))]
-            _drive_pool_prefix(events, int(rng.integers(2, 13)))
+            _drive_pool_prefix(events, int(rng.integers(2, 13)),
+                               carryless=carryless)
 
 
 # ---------------------------------------------------------------------------
@@ -448,8 +478,22 @@ def test_prefill_executable_cache_is_bounded():
     assert (3, False) in eng._prefill_lru and (5, False) in eng._prefill_lru
 
 
-def test_paged_rejects_mla():
-    cfg = dataclasses.replace(CFG_DENSE, name="pg-mla", attention="mla",
-                              mla_kv_lora_rank=8)
-    with pytest.raises(NotImplementedError):
-        ServeEngine(cfg, _params(cfg), max_len=48, paged=True)
+def test_mla_rank0_serves_on_dense_kv_paged_path():
+    """Regression (gate keyed on rank truthiness): ``attention='mla'`` with
+    ``mla_kv_lora_rank=0`` carries standard wk/wv projections everywhere
+    (param init, contiguous and paged caches all key on the rank, not the
+    attention name), so it must serve on the dense K/V paged path with
+    byte parity — not slip through unvalidated or hit the latent path with
+    a rank-0 pool."""
+    cfg = dataclasses.replace(CFG_DENSE, name="pg-mla0", attention="mla",
+                              mla_kv_lora_rank=0)
+    params = _params(cfg)
+    assert "wk" in params["blocks"]["layer0"]["attn"]    # standard proj,
+    assert "wkv_a" not in params["blocks"]["layer0"]["attn"]  # no latents
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4)
+    cache = eng.continuous_state(2, num_blocks=8).cache
+    assert "k_pages" in cache["layer0"]              # dense pool, no latents
+    assert "latent_pages" not in cache["layer0"]
+    reqs = _requests(cfg)[:4]
+    sched = ContinuousScheduler(eng, max_batch=2, chunk_len=4, num_blocks=8)
+    _assert_solo_parity(cfg, eng, reqs, sched.run(reqs))

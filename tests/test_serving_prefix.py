@@ -4,8 +4,11 @@ Prefix sharing must be a *numerical no-op*: a request whose prompt prefix
 matches the radix tree maps the published pool pages straight into its
 block table and prefills only the unmatched tail — and its greedy tokens
 stay byte-identical to the same request served alone against a cold cache
-(dense + window archs, 1x1 and the 8-device mesh, composed with
-speculative decoding where rollback never drops below a shared prefix).
+(every registry arch — dense, window, MLA, mamba, rwkv — on 1x1 and the
+8-device mesh, composed with speculative decoding where rollback never
+drops below a shared prefix).  Carryless archs (dense, MLA) match at any
+page depth; carry-bearing archs (window rings, recurrent states) clamp to
+the publisher's carry snapshot and restore it on admission.
 Structurally: pool refcounts equal table references + tree pins, a shared
 page never reaches the free list, copy-on-write never mutates a page with
 refcount > 1, and LRU-leaf eviction reclaims pinned-only pages when the
@@ -35,7 +38,25 @@ CFG_DENSE = ModelConfig(name="pf-dense", family="dense", num_layers=4,
                         vocab_size=64, max_seq_len=64)
 CFG_WINDOW = dataclasses.replace(CFG_DENSE, name="pf-window",
                                  window_pattern=(4, 0))
-ARCH_CFGS = {"dense": CFG_DENSE, "window": CFG_WINDOW}
+CFG_MLA = dataclasses.replace(CFG_DENSE, name="pf-mla", attention="mla",
+                              mla_kv_lora_rank=8)
+CFG_MAMBA = ModelConfig(name="pf-mamba", family="ssm", num_layers=4,
+                        d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
+                        vocab_size=64, max_seq_len=64, attention="none",
+                        position="none", block_pattern=("mamba",),
+                        ssm=SSMConfig(d_state=4))
+CFG_RWKV = ModelConfig(name="pf-rwkv", family="ssm", num_layers=4,
+                       d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
+                       vocab_size=64, max_seq_len=64, attention="none",
+                       position="none", norm="layernorm",
+                       block_pattern=("rwkv",),
+                       ssm=SSMConfig(kind="rwkv6", head_dim=16))
+ARCH_CFGS = {"dense": CFG_DENSE, "window": CFG_WINDOW, "mla": CFG_MLA,
+             "mamba": CFG_MAMBA, "rwkv": CFG_RWKV}
+# Carryless configs (dense, MLA: every layer a paged full-attention layer)
+# match at any page depth; carry-bearing configs (window rings, recurrent
+# states) clamp to the publisher's snapshot at the last page boundary.
+CARRYLESS = ("dense", "mla")
 
 
 def _params(cfg, seed=0):
@@ -78,10 +99,11 @@ def _assert_solo_parity(cfg, params, requests, results):
 @pytest.mark.parametrize("arch", list(ARCH_CFGS))
 def test_prefix_matches_solo_single_device(arch):
     """max_batch 1 serves the workload sequentially, so every hit pattern
-    is deterministic: dense matches at any page depth (full repeat 12,
-    exact boundary 11 = P-1 skipped + one COW rerun token, divergence 4);
-    window clamps to the publisher's carry snapshot (12) and misses where
-    no snapshot fits below P."""
+    is deterministic: carryless archs (dense, MLA) match at any page depth
+    (full repeat 12, exact boundary 11 = P-1 skipped + one COW rerun
+    token, divergence 4); carry-bearing archs (window rings, recurrent
+    mamba/rwkv states) clamp to the publisher's carry snapshot (12) and
+    miss where no snapshot fits below P."""
     cfg = ARCH_CFGS[arch]
     params = _params(cfg)
     eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
@@ -90,7 +112,7 @@ def test_prefix_matches_solo_single_device(arch):
     sched = ContinuousScheduler(eng, max_batch=1, chunk_len=4)
     results = sched.run(reqs)
     _assert_solo_parity(cfg, params, reqs, results)
-    want_hits = ([0, 12, 12, 11, 12, 4] if arch == "dense"
+    want_hits = ([0, 12, 12, 11, 12, 4] if arch in CARRYLESS
                  else [0, 12, 12, 0, 12, 0])
     assert [r.prefix_tokens for r in results] == want_hits
     stats = sched.prefix_stats()
@@ -131,9 +153,9 @@ def test_prefix_composed_with_spec_decode(arch):
     sched = ContinuousScheduler(eng, max_batch=2, chunk_len=4)
     results = sched.run(reqs)
     _assert_solo_parity(cfg, params, reqs, results)
-    # first wave (2 requests) prefills cold; dense later hits at any depth,
-    # window only where the publisher's snapshot fits below P
-    assert sched.prefix_hits >= (4 if arch == "dense" else 2)
+    # first wave (2 requests) prefills cold; carryless archs later hit at
+    # any depth, carry archs only where the snapshot fits below P
+    assert sched.prefix_hits >= (4 if arch in CARRYLESS else 2)
     assert sched.spec_stats()["spec_rounds"] > 0
 
 
@@ -197,19 +219,133 @@ def test_prefix_publish_match_evict_lifecycle():
 
 
 def test_prefix_cache_gates():
-    """prefix_cache requires the paged engine and attention-only archs
-    (recurrent states have no mid-prompt snapshot/restore)."""
+    """prefix_cache still requires the paged engine; recurrent archs now
+    construct (their states ride the radix tree's carry slots — the old
+    attention-only NotImplementedError gate is gone)."""
     cfg = CFG_DENSE
     with pytest.raises(ValueError, match="paged"):
         ServeEngine(cfg, _params(cfg), max_len=48, prefix_cache=True)
-    cfg_m = ModelConfig(name="pf-mamba", family="ssm", num_layers=4,
-                        d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
-                        vocab_size=64, max_seq_len=64, attention="none",
-                        position="none", block_pattern=("mamba",),
-                        ssm=SSMConfig(d_state=4))
-    with pytest.raises(NotImplementedError, match="attention-only"):
-        ServeEngine(cfg_m, _params(cfg_m), max_len=48, paged=True,
-                    prefix_cache=True)
+    eng = ServeEngine(CFG_MAMBA, _params(CFG_MAMBA), max_len=48, paged=True,
+                      block_size=4, prefix_cache=True)
+    assert eng.prefix_cache and not eng._carry_empty
+
+
+def _ticking_clock():
+    """Virtual clock: every reading advances 1 ms, sleeps are no-ops —
+    admission aging triggers deterministically without wall-clock waits."""
+    state = {"t": 0.0}
+
+    def time_fn():
+        state["t"] += 1e-3
+        return state["t"]
+
+    return time_fn, lambda s: None
+
+
+def test_fully_cached_head_never_deadlocks_admission():
+    """Satellite regression: a fully-cached head in a tight pool can
+    charge MORE than a cold admission (its matched pinned-only pages stop
+    being evictable), so the aged-head preflight must re-clamp the match
+    shallower until it fits.  Concretely (4-page pool, block 4): A
+    (P=12, G=5) publishes 3 pinned pages and finishes -> 1 free + 3
+    evictable; head B (same prompt) at full depth needs own 2 + 3
+    de-evicted = 5 > 4 forever (nothing is live, no commitment can
+    drain), while the 2-page clamp needs 2 + 2 = 4 and admits NOW.  The
+    old full-depth-only preflight spun the scheduler forever behind B."""
+    cfg = CFG_DENSE
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                      prefix_cache=True)
+    rng = np.random.default_rng(7)
+    S = rng.integers(0, cfg.vocab_size, (12,)).astype(np.int32)
+    C = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+    reqs = [Request(prompt=S.copy(), max_new_tokens=5),
+            Request(prompt=S.copy(), max_new_tokens=5),
+            Request(prompt=C, max_new_tokens=3)]
+    time_fn, sleep_fn = _ticking_clock()
+    sched = ContinuousScheduler(eng, max_batch=1, chunk_len=4, num_blocks=4,
+                                time_fn=time_fn, sleep_fn=sleep_fn,
+                                admission_age_s=0.0)
+    results = sched.run(reqs)
+    _assert_solo_parity(cfg, params, reqs, results)
+    # B admits on the re-clamped 2-page (8-token) hit, not the 3-page one
+    assert [r.prefix_tokens for r in results] == [0, 8, 0]
+    assert sched.prefix_hits == 1
+
+
+def test_eviction_never_claims_inflight_carry_pages():
+    """Satellite audit lock-in (see RadixCache.evict_one): while a
+    carry-clamped match is in flight, the pages up to AND INCLUDING the
+    snapshot node are row-referenced from admit_prefix until free_slot,
+    so a free-list-dry eviction mid-decode may only claim nodes BELOW
+    the clamp — the restored ring keeps byte parity and the snapshot
+    survives for the next match."""
+    cfg = CFG_WINDOW
+    eng = ServeEngine(cfg, _params(cfg), max_len=48, paged=True,
+                      block_size=4, prefix_cache=True)
+    solo = ServeEngine(cfg, eng.params, mesh=mesh_lib.single_device_mesh(),
+                       max_len=48)
+    state = eng.continuous_state(1, num_blocks=4)
+    rng = np.random.default_rng(5)
+    S = rng.integers(0, cfg.vocab_size, (12,)).astype(np.int32)
+
+    def serve(state, prompt, gen, match=None):
+        state, job = eng.begin_prefill(state, 0, prompt, gen, chunk_len=4,
+                                       match=match)
+        tok = None
+        while not job.done:
+            state, tok = eng.prefill_chunk(state, job)
+        state = eng.admit_paged(state, job, tok)
+        out = [int(np.asarray(tok)[0, 0])]
+        cursor, limit = len(prompt), len(prompt) + gen - 1
+        for _ in range(gen - 1):
+            state.pool.advance(0, min(cursor + 2, limit))
+            state = eng.decode_masked(state)
+            out.append(int(np.asarray(state.tokens)[0, 0]))
+            cursor += 1
+        state.pool.check_invariants()
+        state = eng.free_slot(state, 0)
+        state.pool.check_invariants()
+        want = solo.generate(prompt[None, :], gen).tokens[0]
+        np.testing.assert_array_equal(
+            np.concatenate([prompt, np.asarray(out, np.int32)]), want)
+        return state
+
+    state = serve(state, S, 5)                   # publishes 3 pages,
+    assert state.pool.free_blocks == 1           # carry snapshot at 8
+    match = eng.prefix_match(state, S)
+    assert match is not None and match.skip == 8 and len(match.pages) == 2
+    assert match.carry is not None
+    # B's 4th page forces evict_one mid-decode: the only legal victim is
+    # the extent-12 leaf BELOW the clamp; the snapshot node's page is
+    # row-referenced (parity below would break if it were claimed)
+    state = serve(state, S, 5, match=match)
+    assert state.radix.evicted_pages == 1
+    again = eng.prefix_match(state, S)
+    assert again is not None and again.skip == 8  # snapshot node survived
+    state.pool.check_invariants()
+
+
+def test_radix_eviction_respects_row_referenced_carry_nodes():
+    """Same guarantee at the radix/pool level: with a carry match's pages
+    admitted to a row, evict_one claims the childless leaf below the
+    clamp, then refuses everything row-referenced."""
+    pool = _pool_with_row(12)
+    radix = RadixCache(pool)
+    prompt = np.arange(12, dtype=np.int32)
+    pages = list(pool.row_pages(0))
+    radix.publish(prompt, pages, 3, carry={"snap": 8}, carry_tokens=8)
+    pool.free(0)                                 # pinned-only now
+    m = radix.match(np.arange(14, dtype=np.int32), carryless=False)
+    assert m.skip == 8 and list(m.pages) == pages[:2]
+    pool.admit_prefix(1, 14, 1, m.pages)         # in-flight carry match
+    assert radix.evict_one()                     # extent-12 leaf only
+    assert pool.ref_count(pages[2]) == 0
+    assert not radix.evict_one()                 # clamp path protected
+    assert pool.ref_count(m.pages[1]) >= 1
+    m2 = radix.match(np.arange(14, dtype=np.int32), carryless=False)
+    assert m2 is not None and m2.skip == 8 and m2.carry == {"snap": 8}
+    pool.check_invariants()
 
 
 # ---------------------------------------------------------------------------

@@ -9,9 +9,11 @@ with a REJECTION-HEAVY draft (random deep model, truncated prefix — the
 hard case: rollback, ring restore, partial accepts every round) and with
 the paper's own draft (a ``copying_zeroL``-expanded model truncated at its
 pre-expansion depth — function-preserving, so the acceptance rate is
-exactly 1.0).  Satellites: depth-truncated drafts of zeroL expansions are
-bitwise the pre-expansion checkpoint; admission aging bounds first-fit
-starvation of large page commitments.
+exactly 1.0).  Both hold for EVERY registry family: dense/MLA KV rings
+restore on rejection, and recurrent (mamba/rwkv) states rewind via
+index-selects from per-step checkpoint rings.  Satellites: depth-truncated
+drafts of zeroL expansions are bitwise the pre-expansion checkpoint;
+admission aging bounds first-fit starvation of large page commitments.
 """
 import dataclasses
 
@@ -32,7 +34,21 @@ CFG_DENSE = ModelConfig(name="sp-dense", family="dense", num_layers=4,
                         vocab_size=64, max_seq_len=64)
 CFG_WINDOW = dataclasses.replace(CFG_DENSE, name="sp-window",
                                  window_pattern=(4, 0))
-ARCH_CFGS = {"dense": CFG_DENSE, "window": CFG_WINDOW}
+CFG_MLA = dataclasses.replace(CFG_DENSE, name="sp-mla", attention="mla",
+                              mla_kv_lora_rank=8)
+CFG_MAMBA = ModelConfig(name="sp-mamba", family="ssm", num_layers=4,
+                        d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
+                        vocab_size=64, max_seq_len=64, attention="none",
+                        position="none", block_pattern=("mamba",),
+                        ssm=SSMConfig(d_state=4))
+CFG_RWKV = ModelConfig(name="sp-rwkv", family="ssm", num_layers=4,
+                       d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
+                       vocab_size=64, max_seq_len=64, attention="none",
+                       position="none", norm="layernorm",
+                       block_pattern=("rwkv",),
+                       ssm=SSMConfig(kind="rwkv6", head_dim=16))
+ARCH_CFGS = {"dense": CFG_DENSE, "window": CFG_WINDOW, "mla": CFG_MLA,
+             "mamba": CFG_MAMBA, "rwkv": CFG_RWKV}
 
 REQ_SHAPES = ((5, 7), (9, 4), (3, 10), (6, 2), (4, 8), (7, 5))
 
@@ -98,13 +114,18 @@ def test_spec_matches_solo_mesh8(arch):
     _assert_solo_parity(cfg, params, reqs, results)
 
 
-def test_spec_through_zeroL_expansion_accepts_everything():
+@pytest.mark.parametrize("arch", ["dense", "mla", "mamba", "rwkv"])
+def test_spec_through_zeroL_expansion_accepts_everything(arch):
     """The paper's free draft: a ``copying_zeroL`` 2->4 expansion served
     speculatively with the depth-2 truncated draft.  The expansion is
     function-preserving and truncation recovers the source stack, so the
     draft's greedy proposals ALWAYS match — acceptance rate exactly 1.0 —
-    and the stream equals the pre-expansion model served contiguous solo."""
-    cfg2, cfg4 = CFG_DENSE.with_depth(2), CFG_DENSE.with_depth(4)
+    and the stream equals the pre-expansion model served contiguous solo.
+    Exact-1.0 across dense, MLA (paged latents) and recurrent mamba/rwkv
+    (checkpoint-ring rollback) locks in that no rollback path perturbs
+    draft or verify state."""
+    base = ARCH_CFGS[arch]
+    cfg2, cfg4 = base.with_depth(2), base.with_depth(4)
     p2 = _params(cfg2, seed=1)
     p4 = exp.expand_params(p2, cfg2, 4, "copying_zeroL")
     reqs = _requests(cfg2)[:4]
@@ -254,7 +275,7 @@ def test_truncate_params_validation():
 # ---------------------------------------------------------------------------
 
 
-def test_spec_requires_paged_and_attention_only():
+def test_spec_requires_paged_and_valid_draft():
     cfg = CFG_DENSE
     params = _params(cfg)
     with pytest.raises(ValueError, match="paged"):
@@ -268,14 +289,11 @@ def test_spec_requires_paged_and_attention_only():
     with pytest.raises(ValueError, match="window"):
         ServeEngine(CFG_WINDOW, _params(CFG_WINDOW), max_len=48, paged=True,
                     spec_decode=True, gamma=4, draft_depth=2)
-    cfg_m = ModelConfig(name="sp-mamba", family="ssm", num_layers=4,
-                        d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
-                        vocab_size=64, max_seq_len=64, attention="none",
-                        position="none", block_pattern=("mamba",),
-                        ssm=SSMConfig(d_state=4))
-    with pytest.raises(NotImplementedError, match="attention-only"):
-        ServeEngine(cfg_m, _params(cfg_m), max_len=48, paged=True,
-                    spec_decode=True, gamma=3, draft_depth=2)
+    # recurrent archs are no longer gated: the engine constructs and
+    # carries a (γ+1)-deep recurrent-state checkpoint ring for rollback
+    eng = ServeEngine(CFG_MAMBA, _params(CFG_MAMBA), max_len=48, paged=True,
+                      spec_decode=True, gamma=3, draft_depth=2)
+    assert eng.spec_decode and eng.gamma == 3
 
 
 # ---------------------------------------------------------------------------
