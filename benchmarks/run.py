@@ -866,6 +866,295 @@ def bench_serve_prefix(fast=False):
               "— run `--only serve_prefix` for the mesh layout", flush=True)
 
 
+# ---------------------------------------------------------------------------
+# Remat policy: 'dots' vs 'nothing' per architecture on the 8-device mesh
+# ---------------------------------------------------------------------------
+
+def bench_remat(fast=False):
+    """Train-step wall time under activation checkpointing, per assigned
+    architecture's smoke config on the 8-device host mesh:
+    ``remat='nothing'`` (recompute everything inside the layer scan, minimal
+    live memory) vs ``remat='dots'`` (save matmul outputs with no batch
+    dims, recompute the rest).
+
+    The measurements set ``configs.REMAT_DEFAULTS`` — the policy a config
+    should use WHEN remat is on (``launch/train.py --remat auto``): matmul-
+    heavy dense/MoE stacks win with 'dots' (the recomputed matmuls are the
+    expensive part), while scan-state archs (rwkv/mamba) see little
+    difference (their recompute is elementwise).  Whisper's encoder-decoder
+    path takes a plain ``jax.checkpoint`` either way, so both labels time
+    identically there.  Writes ``BENCH_remat.json``."""
+    _fake_devices_for_serve()
+    import jax
+    import jax.numpy as jnp
+    from repro import configs as cfglib
+    from repro.configs.base import OptimizerConfig
+    from repro.core.schedules import wsd
+    from repro.distributed import sharding as shd
+    from repro.launch import mesh as mesh_lib
+    from repro.models import common as model_common
+    from repro.models import registry
+    from repro.optim.base import make_optimizer
+    from repro.train import steps as steps_lib
+
+    B, S = 8, 32
+    archs = list(cfglib.ASSIGNED_ARCHS)
+    if fast:
+        archs = archs[:3]
+    mesh = mesh_lib.make_train_mesh("host")
+    n_dev = len(jax.devices())
+    prev_mesh = model_common.get_active_mesh()
+    prev_layout = model_common.get_activation_layout()
+    model_common.set_active_mesh(mesh)
+    model_common.set_activation_layout("tp")
+    out = {"batch": B, "seq_len": S, "devices": n_dev, "archs": {}}
+    reps = 3 if fast else 10
+    try:
+        for arch in archs:
+            cfg = cfglib.get_smoke_config(arch)
+            api = registry.get_model(cfg)
+            key = jax.random.PRNGKey(0)
+            batch = {}
+            if cfg.is_encoder_decoder:
+                batch["frames"] = jax.random.normal(
+                    key, (B, cfg.encoder_seq_len, cfg.d_model))
+            elif cfg.frontend != "none" and cfg.num_frontend_embeds:
+                batch["embeds"] = jax.random.normal(
+                    key, (B, cfg.num_frontend_embeds, cfg.d_model))
+            toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+            batch["tokens"] = toks
+            batch["labels"] = toks
+            opt = make_optimizer(OptimizerConfig(name="muon_nsgd",
+                                                 learning_rate=0.01))
+            p_struct = jax.eval_shape(lambda k: api.init(k, cfg),
+                                      jax.random.PRNGKey(0))
+            os_struct = jax.eval_shape(opt.init, p_struct)
+            p_sh = shd.params_shardings(p_struct, mesh, fsdp=False)
+            os_sh = shd.opt_state_shardings(os_struct, mesh, fsdp=False)
+            b_sh = shd.batch_shardings(
+                jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                             batch), mesh)
+            sh = steps_lib.StepShardings(mesh=mesh, params=p_sh,
+                                         opt_state=os_sh, batch=b_sh,
+                                         replicated=shd.replicated(mesh))
+            params = jax.jit(lambda k: api.init(k, cfg),
+                             out_shardings=p_sh)(jax.random.PRNGKey(0))
+            state = jax.jit(opt.init, out_shardings=os_sh)(params)
+            batch_dev = jax.device_put(batch, b_sh)
+            row = {}
+            for policy in ("nothing", "dots"):
+                step = steps_lib.make_train_step(cfg, opt, wsd(0.01, 100),
+                                                 remat=policy, donate=False,
+                                                 shardings=sh)
+                m = step(params, state, batch_dev, jnp.asarray(0))[2]
+                jax.block_until_ready(m["loss"])              # compile
+                t0 = time.perf_counter()
+                for i in range(reps):
+                    m = step(params, state, batch_dev, jnp.asarray(i))[2]
+                jax.block_until_ready(m["loss"])
+                row[policy] = (time.perf_counter() - t0) * 1e6 / reps
+            best = min(row, key=row.get)
+            ratio = row["nothing"] / max(row["dots"], 1e-9)
+            out["archs"][arch] = {**row, "dots_speedup": ratio, "best": best}
+            _row(f"remat/{arch}", row[best],
+                 f"nothing_us={row['nothing']:.0f};dots_us={row['dots']:.0f};"
+                 f"dots_speedup={ratio:.2f};best={best}")
+    finally:
+        model_common.set_active_mesh(prev_mesh)
+        model_common.set_activation_layout(prev_layout)
+    if n_dev > 1:
+        with open("BENCH_remat.json", "w") as f:
+            json.dump(out, f, indent=1)
+        print("# wrote BENCH_remat.json", flush=True)
+    else:
+        print("# single device only (jax initialized before bench_remat); "
+              "BENCH_remat.json left untouched — run `--only remat` for the "
+              "mesh layout", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV pages: int8 pool vs f32 pool at FIXED cache memory
+# ---------------------------------------------------------------------------
+
+def bench_serve_quant(fast=False):
+    """int8 KV page pool vs the ``serve_paged`` f32 paged baseline at the
+    SAME pool byte budget, on the same long-tail Poisson workload.
+
+    An int8 slot costs ``2*KV*hd`` bytes plus ``2*KV`` f32 scales vs
+    ``8*KV*hd`` for f32 — ratio ~0.31 at TINY's head_dim=16 — so the same
+    bytes buy ~3.2x the pages.  Both engines run the SAME max_batch (8
+    slots — slots are cheap; KV is pool-gated), so every masked decode
+    step costs the same and storage dtype is the ONLY variable: the f32
+    pool (11 pages, 1.5 contiguous rows' worth — a memory-tight
+    deployment) is ADMISSION-bound the whole run — the long request pins
+    8 of its pages, leaving room for ONE short at a time — while the
+    int8 pool spends the same bytes as ~3.2x the pages and keeps all 8
+    slots in flight.  More live rows per equal-cost step is the win; a
+    deterministic burst phase (heavy + 7 shorts, all arrivals 0) pins the
+    ≥2x admitted-concurrency claim.  The roofline channel
+    (``predicted_quant_speedup``: smaller per-token KV stream at FIXED
+    batch) is recorded alongside — on TINY the param read dominates and it
+    predicts ~1x, which is honest: at toy scale the bytes win shows up as
+    capacity, not per-step latency.  Both predictions bracket the measured
+    ratio in the artifact.
+
+    Greedy streams are compared uid-by-uid against the f32 run
+    (tolerance-not-byte-parity contract: see
+    ``tests/test_serving_paged.py::TestQuantizedTolerance``) and the token
+    agreement rate is recorded.  Writes ``BENCH_serve_quant.json``."""
+    _fake_devices_for_serve()
+    import jax
+    import numpy as np
+    from benchmarks.common import TINY
+    from repro.launch import mesh as mesh_lib
+    from repro.models import registry
+    from repro.roofline.analysis import (decode_hbm_bytes_per_token,
+                                         predicted_quant_speedup)
+    from repro.train.serve_engine import ServeEngine
+    from repro.train.serve_scheduler import (ContinuousScheduler, Request,
+                                             summarize)
+
+    BS = 8                                             # tokens per page
+    # bench_serve_paged's long-tail mix with the short tail doubled (one
+    # heavy + 60 shorts): the run stays decode-bound long enough that the
+    # admission gap — not host scheduling noise — sets the wall clock.
+    # The shared byte budget is 1.5 contiguous max_len rows' worth.
+    p_tail = [8, 4, 12, 8, 4, 8, 12, 4, 8, 4, 12, 8, 4, 8,
+              12, 4, 8, 4, 12, 8, 4, 8, 12, 4, 8, 4, 12, 8, 4, 8]
+    g_tail = [6, 9, 5, 8, 10, 6, 7, 11, 5, 9, 6, 8, 7, 10,
+              5, 8, 6, 11, 9, 7, 10, 5, 6, 8, 9, 7, 5, 10, 6, 8]
+    p_lens = np.array([16] + p_tail * 2)
+    g_lens = np.array([44] + g_tail * 2)
+    if fast:
+        p_lens, g_lens = p_lens[:8], g_lens[:8] // 2 + 3
+    N = len(p_lens)
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(0.001, N))    # near-burst: queue
+    max_len = int(p_lens.max() + g_lens.max() + 1)     # builds immediately
+    f32_blocks = (3 * max_len // 2) // BS              # 11
+    MAXB = 8                                           # both engines
+
+    api = registry.get_model(TINY)
+    params = api.init(jax.random.PRNGKey(0), TINY)
+    rng2 = np.random.default_rng(1)
+    reqs = [Request(prompt=rng2.integers(0, TINY.vocab_size,
+                                         (int(p),)).astype(np.int32),
+                    max_new_tokens=int(g), arrival_s=float(a))
+            for p, g, a in zip(p_lens, g_lens, arrivals)]
+
+    def timed_run(sched):
+        t0 = time.perf_counter()
+        results = sched.run(reqs)
+        return results, summarize(results, time.perf_counter() - t0)
+
+    def agreement(a_results, b_results):
+        """Greedy-stream token agreement over aligned positions + exact
+        per-request stream matches."""
+        match = total = exact = 0
+        for a, b in zip(a_results, b_results):
+            n = min(len(a.new_tokens), len(b.new_tokens))
+            m = int(np.sum(a.new_tokens[:n] == b.new_tokens[:n]))
+            match += m
+            total += max(len(a.new_tokens), len(b.new_tokens))
+            exact += int(m == n == len(a.new_tokens) == len(b.new_tokens))
+        return match / max(total, 1), exact / max(len(a_results), 1)
+
+    n_dev = len(jax.devices())
+    meshes = {"single": mesh_lib.single_device_mesh()}
+    if n_dev > 1:
+        meshes[f"mesh{n_dev}"] = mesh_lib.make_train_mesh("host")
+    ctx = int(np.mean(p_lens + g_lens))
+    out = {"requests": N, "block_size": BS, "max_len": max_len,
+           "arch": TINY.name, "prompt_lens": p_lens.tolist(),
+           "gen_lens": g_lens.tolist(), "f32_num_blocks": f32_blocks,
+           "max_batch": MAXB, "layouts": {}}
+    reps = 1 if fast else 6
+    for name, mesh in meshes.items():
+        base_eng = ServeEngine(TINY, params, mesh=mesh, max_len=max_len,
+                               paged=True, block_size=BS)
+        int8_eng = ServeEngine(TINY, params, mesh=mesh, max_len=max_len,
+                               paged=True, block_size=BS, kv_dtype="int8")
+        # Spend the f32 pool's bytes as int8 pages (scales included in the
+        # engine's own bytes-per-token price), never exceeding the budget.
+        bpt_f32 = base_eng.kv_bytes_per_token()
+        bpt_int8 = int8_eng.kv_bytes_per_token()
+        int8_blocks = int(f32_blocks * bpt_f32 // bpt_int8)
+        base_s = ContinuousScheduler(base_eng, max_batch=MAXB,
+                                     num_blocks=f32_blocks)
+        int8_s = ContinuousScheduler(int8_eng, max_batch=MAXB,
+                                     num_blocks=int8_blocks)
+        base_s.warmup(reqs)
+        int8_s.warmup(reqs)
+        base = quant = base_results = quant_results = None
+        ratios = []
+        for _ in range(reps):          # interleaved, median-paired (PR 4)
+            br, b = timed_run(base_s)
+            qr, q = timed_run(int8_s)
+            ratios.append(q["tokens_per_s"] / max(b["tokens_per_s"], 1e-9))
+            if base is None or b["tokens_per_s"] > base["tokens_per_s"]:
+                base, base_results = b, br
+            if quant is None or q["tokens_per_s"] > quant["tokens_per_s"]:
+                quant, quant_results = q, qr
+        speedup = float(np.median(ratios))
+        tok_agree, exact_frac = agreement(base_results, quant_results)
+        base["peak_concurrency"] = base_s.peak_concurrency
+        quant["peak_concurrency"] = int8_s.peak_concurrency
+        # Burst phase: heavy + 7 shorts, all arrivals 0 — admitted
+        # concurrency at the SAME instant and byte budget, deterministic
+        # (the f32 pool fits heavy's 8 pages + 3 shorts; int8's extra
+        # pages admit the full batch).
+        burst = [Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+                         uid=i) for i, r in enumerate(reqs[:MAXB])]
+        burst_f32 = ContinuousScheduler(base_eng, max_batch=MAXB,
+                                        num_blocks=f32_blocks)
+        burst_int8 = ContinuousScheduler(int8_eng, max_batch=MAXB,
+                                         num_blocks=int8_blocks)
+        burst_f32.run(burst)
+        burst_int8.run(burst)
+        conc = (burst_int8.peak_concurrency
+                / max(burst_f32.peak_concurrency, 1))
+        kv = int8_s.kv_stats()
+        pool_bytes = {"f32": int(bpt_f32 * BS * f32_blocks),
+                      "int8": int(bpt_int8 * BS * int8_blocks)}
+        pred_fixed = predicted_quant_speedup(TINY, ctx, "int8", batch=MAXB)
+        pred_conc = (decode_hbm_bytes_per_token(TINY, ctx, "f32",
+                                                burst_f32.peak_concurrency)
+                     / decode_hbm_bytes_per_token(
+                         TINY, ctx, "int8", burst_int8.peak_concurrency))
+        out["layouts"][name] = {
+            "f32_paged": base, "int8_paged": quant,
+            "int8_num_blocks": int8_blocks,
+            "pool_bytes": pool_bytes, "kv_stats": kv,
+            "throughput_speedup": speedup,
+            "burst_peak_concurrency": {
+                "f32": burst_f32.peak_concurrency,
+                "int8": burst_int8.peak_concurrency},
+            "concurrency_gain": conc,
+            "predicted_speedup_fixed_batch": pred_fixed,
+            "predicted_speedup_equal_bytes": pred_conc,
+            "greedy_token_agreement": tok_agree,
+            "greedy_exact_stream_fraction": exact_frac}
+        _row(f"serve_quant/{name}", quant["wall_s"] * 1e6,
+             f"tokens_per_s={quant['tokens_per_s']:.1f};"
+             f"baseline={base['tokens_per_s']:.1f};"
+             f"speedup={speedup:.2f};"
+             f"burst_concurrency={burst_int8.peak_concurrency}v"
+             f"{burst_f32.peak_concurrency};"
+             f"pool_bytes={pool_bytes['int8']}v{pool_bytes['f32']};"
+             f"bytes_ratio={kv['kv_bytes_ratio']:.3f};"
+             f"predicted={pred_fixed:.2f}/{pred_conc:.2f};"
+             f"token_agreement={tok_agree:.4f};"
+             f"ttft_p50_ms={quant['ttft_p50_s'] * 1e3:.1f}")
+    if n_dev > 1:
+        with open("BENCH_serve_quant.json", "w") as f:
+            json.dump(out, f, indent=1)
+        print("# wrote BENCH_serve_quant.json", flush=True)
+    else:
+        print("# single device only (jax initialized before "
+              "bench_serve_quant); BENCH_serve_quant.json left untouched — "
+              "run `--only serve_quant` for the mesh layout", flush=True)
+
+
 BENCHES = {
     "expansion_init": bench_expansion_init,
     "copying_variants": bench_copying_variants,
@@ -876,14 +1165,16 @@ BENCHES = {
     "mup_transfer": bench_mup_transfer,
     "theory": bench_theory,
     "kernels": bench_kernels,
-    # last five: mutate the jax environment when they run first
+    # serving benches: mutate the jax environment when they run first
     # (`--only serve` / `--only serve_continuous` / `--only serve_paged`
-    #  / `--only serve_spec` / `--only serve_prefix`)
+    #  / `--only serve_spec` / `--only serve_prefix` / `--only serve_quant`)
     "serve": bench_serve,
     "serve_continuous": bench_serve_continuous,
     "serve_paged": bench_serve_paged,
     "serve_spec": bench_serve_spec,
     "serve_prefix": bench_serve_prefix,
+    "serve_quant": bench_serve_quant,
+    "remat": bench_remat,
 }
 
 

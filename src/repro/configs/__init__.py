@@ -31,6 +31,32 @@ ASSIGNED_ARCHS = tuple(ARCH_MODULES)
 # archs run it; pure full-attention archs (and whisper) skip it.
 LONG_CONTEXT_ARCHS = ("rwkv6-7b", "jamba-v0.1-52b", "gemma2-9b", "gemma3-12b")
 
+# Checkpoint policy to use WHEN remat is enabled, measured on the 8-fake-
+# device host mesh (`benchmarks/run.py --only remat`, smoke shapes, median
+# dots-vs-nothing step-time ratio over 3 runs): 'dots' (save matmul outputs
+# with no batch dims) only where it beat full recompute by >=5%; washes and
+# losses keep 'nothing' — full recompute also has the lowest live memory,
+# which is why remat is on in the first place.  Whisper's encoder-decoder
+# path takes a plain jax.checkpoint either way.
+REMAT_DEFAULTS = {
+    "gemma2-9b": "nothing",            # 1.00x median (noisy, no stable win)
+    "gemma3-12b": "dots",              # 1.11x
+    "yi-34b": "dots",                  # 1.07x
+    "starcoder2-3b": "nothing",        # 0.92x
+    "jamba-v0.1-52b": "nothing",       # 1.02x (wash)
+    "whisper-base": "nothing",         # policy label is a no-op (encdec)
+    "rwkv6-7b": "nothing",             # 0.94x (scan recompute is elementwise)
+    "qwen2-vl-2b": "dots",             # 1.15x
+    "moonshot-v1-16b-a3b": "nothing",  # 0.82x
+    "deepseek-moe-16b": "dots",        # 1.08x
+}
+
+
+def default_remat(name: str) -> str:
+    """Measured checkpoint policy for ``name`` when remat is enabled
+    (see REMAT_DEFAULTS); unmeasured configs recompute everything."""
+    return REMAT_DEFAULTS.get(name, "nothing")
+
 
 def get_config(name: str) -> ModelConfig:
     if name.startswith("gpt2"):

@@ -253,7 +253,10 @@ class TrainConfig:
     eval_batches: int = 4
     seed: int = 0
     dtype: str = "float32"           # compute dtype ('bfloat16' on TPU)
-    remat: bool = False              # activation checkpointing over layer scan
+    # Activation checkpointing over the layer scan: False (off), True /
+    # 'nothing' (recompute everything), or 'dots' (save matmul outputs —
+    # per-arch measured defaults live in configs.REMAT_DEFAULTS).
+    remat: "bool | str" = False
     log_every: int = 10
 
 

@@ -1,0 +1,106 @@
+"""Shared symmetric quantization helpers — ONE quantizer, two call sites.
+
+Used by ``distributed.collectives`` (per-tensor int8 gradient compression
+on the cross-pod axis) and by the paged KV cache (per-slot-per-head int8 /
+fp8 page storage with float32 scales dequantized inside attention).
+
+Conventions:
+  * symmetric, zero-point-free: ``scale = max|x| / qmax + eps`` along the
+    reduced axes, ``q = round(x / scale)`` clipped to the representable
+    range (int8) or cast (fp8 — the cast saturates to ±448 for e4m3fn);
+  * ``axis=None`` reduces over the whole tensor (scalar scale — the
+    gradient-compression contract); an int/tuple axis keeps dims, so the
+    scale broadcasts back against ``q`` without reshapes and rides any
+    gather/scatter the quantized tensor itself rides;
+  * scales are ALWAYS float32 regardless of the storage dtype.
+
+fp8 availability is probed with ``hasattr`` (older jaxlibs lack the
+dtype); callers gate on :func:`fp8_dtype` instead of importing it.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Axis = Union[None, int, Tuple[int, ...]]
+
+# Largest representable magnitude per storage dtype (int8 symmetric range;
+# fp8 e4m3fn saturates at 448).
+_INT8_MAX = 127.0
+_FP8_E4M3_MAX = 448.0
+_EPS = 1e-12
+
+
+def fp8_dtype():
+    """``jnp.float8_e4m3fn`` when this jaxlib has it, else None."""
+    return getattr(jnp, "float8_e4m3fn", None)
+
+
+def is_quantized(dtype) -> bool:
+    """True for storage dtypes that need a scale array (int8 / fp8)."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.int8:
+        return True
+    f8 = fp8_dtype()
+    return f8 is not None and dtype == jnp.dtype(f8)
+
+
+def qmax(dtype) -> float:
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.int8:
+        return _INT8_MAX
+    f8 = fp8_dtype()
+    if f8 is not None and dtype == jnp.dtype(f8):
+        return _FP8_E4M3_MAX
+    raise ValueError(f"not a quantized storage dtype: {dtype}")
+
+
+def quantize(x: jax.Array, axis: Axis = None,
+             dtype=jnp.int8) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric quantization of ``x`` to ``dtype``.
+
+    Returns ``(q, scale)`` with ``scale`` float32; ``axis=None`` yields a
+    scalar scale, otherwise the reduced dims are KEPT (size 1) so
+    ``q.astype(f32) * scale`` broadcasts without reshaping.
+    """
+    xf = x.astype(jnp.float32)
+    m = qmax(dtype)
+    if axis is None:
+        scale = jnp.max(jnp.abs(xf)) / m + _EPS
+    else:
+        scale = jnp.max(jnp.abs(xf), axis=axis, keepdims=True) / m + _EPS
+    y = xf / scale
+    if jnp.dtype(dtype) == jnp.int8:
+        q = jnp.clip(jnp.round(y), -m, m).astype(jnp.int8)
+    else:                                   # fp8: cast saturates
+        q = y.astype(dtype)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+_KV_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
+def resolve_kv_dtype(name: Optional[str]):
+    """Map a ``--kv-dtype`` CLI name to a storage dtype (None -> None,
+    i.e. 'use the engine's cache_dtype').  Raises for 'fp8' when this
+    jaxlib has no float8 support — quantized serving must not silently
+    fall back to a wider dtype."""
+    if name is None:
+        return None
+    if name in _KV_DTYPES:
+        return _KV_DTYPES[name]
+    if name == "fp8":
+        f8 = fp8_dtype()
+        if f8 is None:
+            raise ValueError(
+                "kv_dtype='fp8' requested but this jaxlib has no "
+                "float8_e4m3fn; use 'int8' (same byte width) instead")
+        return f8
+    raise ValueError(f"unknown kv_dtype {name!r} "
+                     f"(choose from f32, bf16, int8, fp8)")

@@ -15,21 +15,24 @@ from typing import Deque, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
+
 
 # ---------------------------------------------------------------------------
 # int8 gradient compression + error feedback
 # ---------------------------------------------------------------------------
+# Thin wrappers over the shared quantizer (repro.core.quant) — the same
+# symmetric scheme stores the serving engine's KV pages; here the scale is
+# per-tensor (axis=None) so the all-reduce payload is one int8 tensor + one
+# f32 scalar per leaf.
 
 def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Per-tensor symmetric int8 quantization.  Returns (q, scale)."""
-    xf = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    return quant.quantize(x, axis=None, dtype=jnp.int8)
 
 
 def decompress_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
-    return (q.astype(jnp.float32) * scale).astype(dtype)
+    return quant.dequantize(q, scale, dtype)
 
 
 def init_error_feedback(grads):

@@ -188,14 +188,18 @@ def cache_shardings(cache_specs, mesh: Mesh):
     may address any page, so their page dim is deliberately replicated over
     the DP axes (sharding it would turn every block-table gather into an
     all-to-all); only the trailing dims are candidates for the 'model'
-    axis, like a contiguous cache's."""
+    axis, like a contiguous cache's.  Quantized pools add per-slot scale
+    leaves (``*_scales``) with the same leading (page, slot) dims — they
+    follow the pool rule so a page and its scales always land together."""
     sizes = dict(mesh.shape)
     dp = tuple(a for a in ("pod", "data") if a in sizes)
     dp_total = int(np.prod([sizes[a] for a in dp])) if dp else 1
 
     def one(path, leaf):
         names = _leaf_path_names(path)
-        paged = names and names[-1] in ("k_pages", "v_pages", "latent_pages")
+        paged = names and names[-1] in ("k_pages", "v_pages", "latent_pages",
+                                        "k_scales", "v_scales",
+                                        "latent_scales")
         shape = leaf.shape
         axes: list = [None] * len(shape)
         if not paged and dp and len(shape) >= 2 \

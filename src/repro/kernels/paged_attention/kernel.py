@@ -21,6 +21,12 @@ table, without ever materializing the row's contiguous KV layout in HBM:
 Free rows point at the pool's trash page — its contents are finite garbage,
 so a skipped/masked read never poisons live rows (per-row math only).
 
+Quantized pool storage (int8/fp8 pages + per-slot-per-head f32 scale pages)
+adds a dequant step inside the page-iteration loop: the scale tiles are
+extra block operands indexed through the SAME block-table map as the K/V
+pages, so dequantization happens after the f32 cast and before the score
+matmul, and the online-softmax accumulation is unchanged.
+
 For real TPU efficiency ``block_size`` should be a multiple of the lane
 width (128); the CPU test path runs in interpret mode where any size works.
 """
@@ -36,8 +42,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _body(table_ref, index_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
-          l_ref, *, scale: float, softcap: float, bs: int, n_blocks: int):
+def _body(table_ref, index_ref, q_ref, k_ref, v_ref, *rest, scale: float,
+          softcap: float, bs: int, n_blocks: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -55,6 +65,13 @@ def _body(table_ref, index_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, hd)
         k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bs, hd)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            # Fused dequant inside the page loop: the per-slot f32 scale
+            # page arrived through the same block-table-indexed DMA as its
+            # K/V page; (bs, 1) broadcasts over (bs, hd).  Online-softmax
+            # math below is untouched.
+            k = k * ks_ref[0, :, 0, :]
+            v = v * vs_ref[0, :, 0, :]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (G, bs)
         if softcap > 0:
@@ -78,32 +95,50 @@ def _body(table_ref, index_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
 
 
 def paged_attention_tpu(q, k_pages, v_pages, block_table, index, *,
+                        k_scales=None, v_scales=None,
                         logit_softcap: float = 0.0, interpret: bool = False):
     """q: (B, 1, H, hd); k_pages/v_pages: (NP, bs, KV, hd);
     block_table: (B, NB) int32; index: (B,) int32 (valid slots <= index).
-    Returns (B, 1, H, hd)."""
+    ``k_scales``/``v_scales`` ((NP, bs, KV, 1) f32, quantized storage)
+    switch on the fused-dequant body.  Returns (B, 1, H, hd).
+
+    The scale pages ride the SAME block-table-indexed BlockSpec as their
+    K/V pages rather than the scalar-prefetch channel: (NP * bs * KV) f32
+    scales scale with the pool and would blow the SMEM budget that the
+    (small, per-row) block table and cursors live in, while as block
+    operands they simply join the existing page DMA stream — one extra
+    (bs, 1) f32 tile per page fetch.
+    """
     B, _, H, hd = q.shape
     bs, KV = k_pages.shape[1], k_pages.shape[2]
     G = H // KV
     NB = block_table.shape[1]
     grid = (B, KV, NB)
     scale = 1.0 / (hd ** 0.5)
+    quantized = k_scales is not None
 
     # Fold the GQA group into q's row dim: head h = kv * G + g.
     qg = q.reshape(B, KV, G, hd)
 
     kernel = functools.partial(_body, scale=scale, softcap=logit_softcap,
-                               bs=bs, n_blocks=NB)
+                               bs=bs, n_blocks=NB, quantized=quantized)
+    page_spec = pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, j, tbl, idx: (tbl[b, j], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), lambda b, h, j, tbl, idx: (b, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, bs, 1, 1), lambda b, h, j, tbl, idx: (tbl[b, j], 0, h, 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scales, v_scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,          # block_table, index
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, tbl, idx: (b, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
-                         lambda b, h, j, tbl, idx: (tbl[b, j], 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
-                         lambda b, h, j, tbl, idx: (tbl[b, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, h, j, tbl, idx: (b, h, 0, 0)),
         scratch_shapes=[pltpu.VMEM((G, hd), jnp.float32),
@@ -115,6 +150,5 @@ def paged_attention_tpu(q, k_pages, v_pages, block_table, index, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), index.astype(jnp.int32),
-      qg, k_pages, v_pages)
+    )(block_table.astype(jnp.int32), index.astype(jnp.int32), *operands)
     return out.reshape(B, 1, H, hd)

@@ -21,6 +21,13 @@ pages (which already contain the chunk's own keys — the caller writes the
 chunk's K/V through the block table *before* attending).  One causal rule
 ``key_slot <= query_pos`` covers both the previously prefilled context and
 the in-chunk triangle.
+
+Quantized pool storage (``kv_dtype`` int8/fp8): pages hold quantized values
+plus per-slot-per-head float32 scale pages (``repro.core.quant``, trailing
+keepdim so scales ride the same block-table gathers as their pages).  Every
+paged path below takes optional ``*_scales`` and dequantizes IN the gather
+— the float context equals ``q * scale`` exactly, so these jnp paths are
+the float mirror the Pallas fused-dequant kernel is checked against.
 """
 from __future__ import annotations
 
@@ -71,7 +78,20 @@ def gather_pages(pages, block_table):
     return g.reshape((B, NB * bs) + pages.shape[2:])
 
 
+def gather_dequant(pages, scales, block_table, dtype):
+    """Gather pages through the table; with ``scales`` (quantized storage)
+    dequantize in the gather: the (B, S, ...) float context is
+    ``q.astype(f32) * scale`` — scale pages are gathered through the SAME
+    table, so shared (radix) pages dequantize identically for every row."""
+    g = gather_pages(pages, block_table)
+    if scales is None:
+        return g.astype(dtype)
+    s = gather_pages(scales, block_table)
+    return (g.astype(jnp.float32) * s).astype(dtype)
+
+
 def paged_attention_ref(q, k_pages, v_pages, block_table, index, *,
+                        k_scales=None, v_scales=None,
                         logit_softcap: float = 0.0, shard_fn=None):
     """Decode through the block table (exact path).
 
@@ -87,8 +107,8 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, index, *,
     per-step attention cost identical to the contiguous layout's.
     """
     B = q.shape[0]
-    k = gather_pages(k_pages, block_table).astype(q.dtype)
-    v = gather_pages(v_pages, block_table).astype(q.dtype)
+    k = gather_dequant(k_pages, k_scales, block_table, q.dtype)
+    v = gather_dequant(v_pages, v_scales, block_table, q.dtype)
     if shard_fn is not None:
         k = shard_fn(k)
         v = shard_fn(v)
@@ -99,6 +119,7 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, index, *,
 
 def paged_attention_decode_deferred_ref(q, k_pages, v_pages, k_new, v_new,
                                         index, block_table, *,
+                                        k_scales=None, v_scales=None,
                                         logit_softcap: float = 0.0,
                                         shard_fn=None):
     """Decode with a DEFERRED pool write (the non-TPU hot path).
@@ -111,11 +132,13 @@ def paged_attention_decode_deferred_ref(q, k_pages, v_pages, k_new, v_new,
     the pool once per step, batched across every layer of the scan
     (``transformer.lm_decode_step``).  The attention input is byte-
     identical to the contiguous ``attn_decode``'s cache-after-write, so
-    parity holds by construction.  Returns (B, 1, H, hd).
+    parity holds by construction.  Quantized storage: pass the QUANTIZE-
+    THEN-DEQUANTIZE round-tripped new K/V so the dense-selected token
+    equals what a committed page read would yield.  Returns (B, 1, H, hd).
     """
     B = q.shape[0]
-    k = gather_pages(k_pages, block_table).astype(q.dtype)
-    v = gather_pages(v_pages, block_table).astype(q.dtype)
+    k = gather_dequant(k_pages, k_scales, block_table, q.dtype)
+    v = gather_dequant(v_pages, v_scales, block_table, q.dtype)
     if shard_fn is not None:
         k = shard_fn(k)
         v = shard_fn(v)
@@ -130,6 +153,7 @@ def paged_attention_decode_deferred_ref(q, k_pages, v_pages, k_new, v_new,
 
 
 def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, ctx_len, *,
+                                k_scales=None, v_scales=None,
                                 logit_softcap: float = 0.0):
     """Chunked-prefill attention through the block table.
 
@@ -142,8 +166,8 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, ctx_len, *,
     plus the in-chunk causal triangle).  Returns (B, C, H, hd).
     """
     B, C = q.shape[0], q.shape[1]
-    k = gather_pages(k_pages, block_table).astype(q.dtype)
-    v = gather_pages(v_pages, block_table).astype(q.dtype)
+    k = gather_dequant(k_pages, k_scales, block_table, q.dtype)
+    v = gather_dequant(v_pages, v_scales, block_table, q.dtype)
     S = k.shape[1]
     ctx = jnp.asarray(ctx_len, jnp.int32)
     if ctx.ndim == 0:
@@ -155,7 +179,7 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_table, ctx_len, *,
 
 def paged_mla_attention_ref(q, latent_pages, block_table, valid, wkv_b,
                             num_kv_heads: int, *, rotate_fn=None,
-                            latent_new=None, index=None,
+                            latent_new=None, index=None, latent_scales=None,
                             logit_softcap: float = 0.0, shard_fn=None):
     """MLA attention through the block table: pages hold COMPRESSED
     pre-RoPE latent rows ``(NP, bs, r)``, up-projected to K/V inside the
@@ -170,11 +194,12 @@ def paged_mla_attention_ref(q, latent_pages, block_table, valid, wkv_b,
     ``latent_new``/``index`` mirror the deferred-write decode path: the new
     token's latent ``(B, r)`` is dense-selected into the gathered context at
     slot ``index[b]`` BEFORE up-projection, so the pool commit can be
-    batched across layers like the standard K/V deferred path.  Returns
-    (B, C, H, hd).
+    batched across layers like the standard K/V deferred path (quantized
+    storage: pass the round-tripped latent; ``latent_scales`` dequantizes
+    the gathered pages).  Returns (B, C, H, hd).
     """
     B = q.shape[0]
-    lat = gather_pages(latent_pages, block_table).astype(q.dtype)
+    lat = gather_dequant(latent_pages, latent_scales, block_table, q.dtype)
     if shard_fn is not None:
         lat = shard_fn(lat)
     S = lat.shape[1]

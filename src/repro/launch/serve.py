@@ -51,6 +51,23 @@ then shares a common system prefix across requests so the cache has
 traffic to hit, and the run reports hit-rate / skipped-token telemetry.
 ``--no-prefix-cache`` (the default) serves every prompt cold.
 
+``--kv-dtype {f32,bf16,int8,fp8}`` (int8/fp8 require ``--paged``) sets the
+page pool's storage dtype.  int8/fp8 store quantized pages plus per-slot
+float32 scales and dequantize inside the paged-attention read (fused into
+the Pallas kernel's page loop on TPU), cutting the pool's bytes-per-token
+to roughly a quarter — the same page counts admit at ~4x less memory, and
+decode streams proportionally fewer HBM bytes.  THE PARITY CONTRACT
+CHANGES: f32/bf16 greedy streams are byte-identical to contiguous solo
+generation, while quantized streams are checked against the float mirror
+as a TOLERANCE lane — same-step logits stay within the quantization noise
+floor and greedy token streams agree within a documented edit rate (see
+tests/test_serving_paged.py::TestQuantizedTolerance) rather than byte
+parity.  Composes with ``--spec-depth`` (verify writes and rollback run
+over quantized pages; spec-vs-plain parity WITHIN the quantized lane stays
+exact) and ``--prefix-cache`` (scales are keyed by physical page id, so
+shared radix pages carry their scales and shared quantized bytes are
+identical across rows by construction).
+
 ``--spec-depth N`` (with ``--paged``) turns on SELF-SPECULATIVE decoding:
 the depth-N truncation of the served model (shared embedding / final norm
 / tied head — progressive training's free draft) proposes ``--gamma``
@@ -134,6 +151,12 @@ def main(argv=None):
                     help="tokens per KV page for --paged")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="page pool size (default: full provisioning)")
+    ap.add_argument("--kv-dtype", default="f32",
+                    choices=["f32", "bf16", "int8", "fp8"],
+                    help="paged-pool storage dtype; int8/fp8 (require "
+                         "--paged) quantize pages with per-slot f32 scales "
+                         "— greedy parity becomes a tolerance lane vs the "
+                         "float mirror, not byte parity")
     ap.add_argument("--chunk-len", type=int, default=None,
                     help="max prefill chunk width per iteration for --paged")
     ap.add_argument("--no-overlap", action="store_true",
@@ -167,6 +190,9 @@ def main(argv=None):
         raise SystemExit("--spec-depth/--draft-checkpoint require --paged")
     if args.prefix_cache and not args.paged:
         raise SystemExit("--prefix-cache requires --paged")
+    if args.kv_dtype in ("int8", "fp8") and not args.paged:
+        raise SystemExit("--kv-dtype int8/fp8 requires --paged (scales are "
+                         "per-pool-page state)")
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -193,7 +219,8 @@ def main(argv=None):
                          spec_decode=spec, gamma=args.gamma,
                          draft_depth=args.spec_depth,
                          draft_params=draft_params,
-                         prefix_cache=args.prefix_cache)
+                         prefix_cache=args.prefix_cache,
+                         kv_dtype=args.kv_dtype)
 
     if args.continuous:
         shared = rng.integers(0, cfg.vocab_size,
@@ -228,6 +255,12 @@ def main(argv=None):
         print(f"aggregate tokens/s={stats['tokens_per_s']:.1f}  "
               f"ttft p50={stats['ttft_p50_s'] * 1e3:.1f}ms "
               f"p95={stats['ttft_p95_s'] * 1e3:.1f}ms")
+        if args.paged:
+            ks = sched.kv_stats()
+            print(f"kv storage: dtype={ks['kv_dtype']} "
+                  f"bytes/token={ks['kv_bytes_per_token']:.1f} "
+                  f"(f32: {ks['kv_bytes_per_token_f32']:.1f}, "
+                  f"ratio={ks['kv_bytes_ratio']:.3f})")
         if args.prefix_cache:
             ps = sched.prefix_stats()
             print(f"prefix cache: hits={ps['prefix_hits']}/"

@@ -46,7 +46,12 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--history-out", default=None)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--remat", nargs="?", const="auto", default="off",
+                    choices=["off", "auto", "nothing", "dots"],
+                    help="activation checkpointing: bare --remat picks the "
+                    "arch's measured policy (configs.REMAT_DEFAULTS); "
+                    "'nothing' recomputes everything, 'dots' saves matmul "
+                    "outputs")
     ap.add_argument("--mesh", default="single",
                     help="mesh spec: single | host | prod | prod-multipod "
                     "| AxB (data x model), e.g. 4x2")
@@ -73,7 +78,10 @@ def main(argv=None):
         grad_accum=args.grad_accum, source_layers=src, expansions=expansions,
         optimizer=OptimizerConfig(name=args.optimizer, learning_rate=args.lr),
         schedule=ScheduleConfig(name=args.schedule),
-        seed=args.seed, remat=args.remat)
+        seed=args.seed,
+        remat=(False if args.remat == "off"
+               else cfglib.default_remat(args.arch) if args.remat == "auto"
+               else args.remat))
     mesh = mesh_lib.make_train_mesh(args.mesh)
     res = loop.train(cfg, tcfg, checkpoint_dir=args.ckpt_dir, mesh=mesh)
     print(f"final loss: {res.history['loss'][-1]:.4f} "

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import quant
 from repro.models.common import (apply_norm, apply_rope, apply_mrope,
                                  dense_init, maybe_shard, norm_init, softcap)
 
@@ -69,13 +70,30 @@ def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
     ``(block_size, kv_lora_rank)`` page per block instead of two
     ``(block_size, KV, hd)`` pages — and up-project to K/V inside the
     paged-attention gather path (``ref.paged_mla_attention_ref``), so the
-    memory win MLA buys contiguously carries straight into the pool."""
+    memory win MLA buys contiguously carries straight into the pool.
+
+    Quantized storage (``dtype`` int8/fp8): pages hold quantized values and
+    the pytree gains float32 scale leaves with the SAME leading (page, slot)
+    dims plus a trailing keepdim — one scale per slot per KV head (per slot
+    for MLA latents).  Keying scales by PHYSICAL page id is what makes every
+    page-level mechanism (trash redirection, COW copy, radix prefix sharing)
+    carry them automatically: wherever a page goes, its scales go."""
     if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
-        return {"latent_pages": jnp.zeros(
+        c = {"latent_pages": jnp.zeros(
             (num_blocks + 1, block_size, cfg.mla_kv_lora_rank), dtype)}
+        if quant.is_quantized(dtype):
+            c["latent_scales"] = jnp.zeros(
+                (num_blocks + 1, block_size, 1), jnp.float32)
+        return c
     kvh, hd = cfg.num_kv_heads, cfg.head_dim
-    return {"k_pages": jnp.zeros((num_blocks + 1, block_size, kvh, hd), dtype),
-            "v_pages": jnp.zeros((num_blocks + 1, block_size, kvh, hd), dtype)}
+    c = {"k_pages": jnp.zeros((num_blocks + 1, block_size, kvh, hd), dtype),
+         "v_pages": jnp.zeros((num_blocks + 1, block_size, kvh, hd), dtype)}
+    if quant.is_quantized(dtype):
+        c["k_scales"] = jnp.zeros((num_blocks + 1, block_size, kvh, 1),
+                                  jnp.float32)
+        c["v_scales"] = jnp.zeros((num_blocks + 1, block_size, kvh, 1),
+                                  jnp.float32)
+    return c
 
 
 # ---------------------------------------------------------------------------
@@ -276,7 +294,19 @@ def attn_decode_paged(p, cfg: ModelConfig, x: jax.Array, cache, block_table,
         if write_mask is not None:
             page = jnp.where(write_mask, page, trash)
         off = cache_index % bs
-        lat_new = latent[:, 0].astype(lp.dtype)
+        ls = cache.get("latent_scales")
+        if ls is not None:          # quantized pool: per-slot scale rides along
+            lat_new, lat_s = quant.quantize(latent[:, 0], axis=-1,
+                                            dtype=lp.dtype)
+            # Round-trip so the dense-selected new token equals what a
+            # committed page read (q * scale) yields next step.
+            lat_ref_new = quant.dequantize(lat_new, lat_s)
+            pending = {"latent": lat_new, "latent_scale": lat_s,
+                       "page": page, "off": off}
+        else:
+            lat_new = latent[:, 0].astype(lp.dtype)
+            lat_ref_new = lat_new
+            pending = {"latent": lat_new, "page": page, "off": off}
         S = block_table.shape[1] * bs
         valid = (jnp.arange(S)[None, :] <= cache_index[:, None])[:, None, :]
         rot = None
@@ -285,11 +315,12 @@ def attn_decode_paged(p, cfg: ModelConfig, x: jax.Array, cache, block_table,
                                        cfg.rope_theta)
         out = paged_ref.paged_mla_attention_ref(
             q, lp, block_table, valid, p["wkv_b"], cfg.num_kv_heads,
-            rotate_fn=rot, latent_new=lat_new, index=cache_index,
-            logit_softcap=cfg.attn_logit_softcap,
+            rotate_fn=rot, latent_new=lat_ref_new, index=cache_index,
+            latent_scales=ls, logit_softcap=cfg.attn_logit_softcap,
             shard_fn=lambda t: maybe_shard(t, P(("pod", "data"), None, None)))
-        new_cache = {"latent_pages": lp,
-                     "pending": {"latent": lat_new, "page": page, "off": off}}
+        new_cache = {"latent_pages": lp, "pending": pending}
+        if ls is not None:
+            new_cache["latent_scales"] = ls
         out = out.reshape(B, 1, cfg.q_dim) @ p["wo"]
         return out, new_cache
 
@@ -302,6 +333,7 @@ def attn_decode_paged(p, cfg: ModelConfig, x: jax.Array, cache, block_table,
     out, new_cache = pa_ops.paged_attention_decode(
         q, cache["k_pages"], cache["v_pages"], k_new[:, 0], v_new[:, 0],
         page, off, block_table, cache_index,
+        k_scales=cache.get("k_scales"), v_scales=cache.get("v_scales"),
         logit_softcap=cfg.attn_logit_softcap,
         shard_fn=lambda t: maybe_shard(
             t, P(("pod", "data"), None, "model", None)))
@@ -365,8 +397,15 @@ def attn_verify_chunk(p, cfg: ModelConfig, x: jax.Array, cache, index,
         if write_mask is not None:
             page = jnp.where(write_mask, page, trash)
         off = pos % bs
-        lp = lp.at[page, off].set(latent.astype(lp.dtype))
-        new_cache = {"latent_pages": lp}
+        ls = cache.get("latent_scales")
+        if ls is not None:                       # quantized latent pool
+            lat_q, lat_s = quant.quantize(latent, axis=-1, dtype=lp.dtype)
+            lp = lp.at[page, off].set(lat_q)
+            ls = ls.at[page, off].set(lat_s)
+            new_cache = {"latent_pages": lp, "latent_scales": ls}
+        else:
+            lp = lp.at[page, off].set(latent.astype(lp.dtype))
+            new_cache = {"latent_pages": lp}
         S = block_table.shape[1] * bs
         valid = jnp.arange(S)[None, None, :] <= pos[:, :, None]   # (B, C, S)
         rot = None
@@ -375,7 +414,8 @@ def attn_verify_chunk(p, cfg: ModelConfig, x: jax.Array, cache, index,
                                        cfg.rope_theta)
         out = paged_ref.paged_mla_attention_ref(
             q, lp, block_table, valid, p["wkv_b"], cfg.num_kv_heads,
-            rotate_fn=rot, logit_softcap=cfg.attn_logit_softcap)
+            rotate_fn=rot, latent_scales=ls,
+            logit_softcap=cfg.attn_logit_softcap)
     elif window <= 0:                            # paged pool layer
         bs = cache["k_pages"].shape[1]
         trash = cache["k_pages"].shape[0] - 1
@@ -383,14 +423,31 @@ def attn_verify_chunk(p, cfg: ModelConfig, x: jax.Array, cache, index,
         if write_mask is not None:
             page = jnp.where(write_mask, page, trash)
         off = pos % bs
-        k_pages = cache["k_pages"].at[page, off].set(
-            k_new.astype(cache["k_pages"].dtype))
-        v_pages = cache["v_pages"].at[page, off].set(
-            v_new.astype(cache["v_pages"].dtype))
-        new_cache = {"k_pages": k_pages, "v_pages": v_pages}
-        out = pa_ops.paged_prefill_attention(
-            q, k_pages.astype(x.dtype), v_pages.astype(x.dtype), block_table,
-            index, logit_softcap=cfg.attn_logit_softcap)
+        ks, vs = cache.get("k_scales"), cache.get("v_scales")
+        if ks is not None:                       # quantized pool
+            k_q, k_s = quant.quantize(k_new, axis=-1,
+                                      dtype=cache["k_pages"].dtype)
+            v_q, v_s = quant.quantize(v_new, axis=-1,
+                                      dtype=cache["v_pages"].dtype)
+            k_pages = cache["k_pages"].at[page, off].set(k_q)
+            v_pages = cache["v_pages"].at[page, off].set(v_q)
+            ks = ks.at[page, off].set(k_s)
+            vs = vs.at[page, off].set(v_s)
+            new_cache = {"k_pages": k_pages, "v_pages": v_pages,
+                         "k_scales": ks, "v_scales": vs}
+            out = pa_ops.paged_prefill_attention(
+                q, k_pages, v_pages, block_table, index,
+                k_scales=ks, v_scales=vs,
+                logit_softcap=cfg.attn_logit_softcap)
+        else:
+            k_pages = cache["k_pages"].at[page, off].set(
+                k_new.astype(cache["k_pages"].dtype))
+            v_pages = cache["v_pages"].at[page, off].set(
+                v_new.astype(cache["v_pages"].dtype))
+            new_cache = {"k_pages": k_pages, "v_pages": v_pages}
+            out = pa_ops.paged_prefill_attention(
+                q, k_pages.astype(x.dtype), v_pages.astype(x.dtype),
+                block_table, index, logit_softcap=cfg.attn_logit_softcap)
     else:                                        # ring layer, deferred commit
         W = cache["k"].shape[1]
         # Per (b, query c, ring slot s): the position the decode step's ring
@@ -478,8 +535,15 @@ def attn_prefill_chunk(p, cfg: ModelConfig, x: jax.Array, cache, ctx_len,
         pos = ctx_len + jnp.arange(C)            # (C,) absolute slots
         page = block_table[:, pos // bs]         # (B, C) physical pages
         off = jnp.broadcast_to((pos % bs)[None], (B, C))
-        lp = lp.at[page, off].set(latent.astype(lp.dtype))
-        new_cache = {"latent_pages": lp}
+        ls = cache.get("latent_scales")
+        if ls is not None:                       # quantized latent pool
+            lat_q, lat_s = quant.quantize(latent, axis=-1, dtype=lp.dtype)
+            lp = lp.at[page, off].set(lat_q)
+            ls = ls.at[page, off].set(lat_s)
+            new_cache = {"latent_pages": lp, "latent_scales": ls}
+        else:
+            lp = lp.at[page, off].set(latent.astype(lp.dtype))
+            new_cache = {"latent_pages": lp}
         S = block_table.shape[1] * bs
         valid = jnp.arange(S)[None, None, :] <= pos[None, :, None]
         valid = jnp.broadcast_to(valid, (B, C, S))
@@ -489,20 +553,38 @@ def attn_prefill_chunk(p, cfg: ModelConfig, x: jax.Array, cache, ctx_len,
                                        cfg.rope_theta)
         out = paged_ref.paged_mla_attention_ref(
             q, lp, block_table, valid, p["wkv_b"], cfg.num_kv_heads,
-            rotate_fn=rot, logit_softcap=cfg.attn_logit_softcap)
+            rotate_fn=rot, latent_scales=ls,
+            logit_softcap=cfg.attn_logit_softcap)
     elif window <= 0:                            # paged pool layer
         bs = cache["k_pages"].shape[1]
         pos = ctx_len + jnp.arange(C)            # (C,) absolute slots
         page = block_table[:, pos // bs]         # (B, C) physical pages
         off = jnp.broadcast_to((pos % bs)[None], (B, C))
-        k_pages = cache["k_pages"].at[page, off].set(
-            k_new.astype(cache["k_pages"].dtype))
-        v_pages = cache["v_pages"].at[page, off].set(
-            v_new.astype(cache["v_pages"].dtype))
-        new_cache = {"k_pages": k_pages, "v_pages": v_pages}
-        out = pa_ops.paged_prefill_attention(
-            q, k_pages.astype(x.dtype), v_pages.astype(x.dtype), block_table,
-            ctx_len, logit_softcap=cfg.attn_logit_softcap)
+        ks, vs = cache.get("k_scales"), cache.get("v_scales")
+        if ks is not None:                       # quantized pool
+            k_q, k_s = quant.quantize(k_new, axis=-1,
+                                      dtype=cache["k_pages"].dtype)
+            v_q, v_s = quant.quantize(v_new, axis=-1,
+                                      dtype=cache["v_pages"].dtype)
+            k_pages = cache["k_pages"].at[page, off].set(k_q)
+            v_pages = cache["v_pages"].at[page, off].set(v_q)
+            ks = ks.at[page, off].set(k_s)
+            vs = vs.at[page, off].set(v_s)
+            new_cache = {"k_pages": k_pages, "v_pages": v_pages,
+                         "k_scales": ks, "v_scales": vs}
+            out = pa_ops.paged_prefill_attention(
+                q, k_pages, v_pages, block_table, ctx_len,
+                k_scales=ks, v_scales=vs,
+                logit_softcap=cfg.attn_logit_softcap)
+        else:
+            k_pages = cache["k_pages"].at[page, off].set(
+                k_new.astype(cache["k_pages"].dtype))
+            v_pages = cache["v_pages"].at[page, off].set(
+                v_new.astype(cache["v_pages"].dtype))
+            new_cache = {"k_pages": k_pages, "v_pages": v_pages}
+            out = pa_ops.paged_prefill_attention(
+                q, k_pages.astype(x.dtype), v_pages.astype(x.dtype),
+                block_table, ctx_len, logit_softcap=cfg.attn_logit_softcap)
     else:                                        # ring-buffer layer
         W = cache["k"].shape[1]
         # Unroll the ring into its logical order: entry j holds absolute

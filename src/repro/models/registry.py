@@ -33,8 +33,10 @@ class ModelApi:
     prefill: Optional[Callable] = None
     # Paged serving (block-granular KV pool; see repro.train.kv_pool):
     # init_paged_cache: (params, cfg, batch_size, num_blocks, block_size,
-    #   max_len, dtype) -> cache whose full-attention leaves are shared page
-    #   pools addressed through a (B, max_blocks) block table.
+    #   max_len, dtype, kv_dtype=None) -> cache whose full-attention leaves
+    #   are shared page pools addressed through a (B, max_blocks) block
+    #   table; kv_dtype overrides the pool storage dtype (int8/fp8 adds
+    #   per-slot f32 scale leaves).
     # init_prefill_carry: (params, cfg, max_len, dtype) -> B=1 chunked-
     #   prefill carry (window rings + recurrent states).
     # prefill_chunk: (params, cfg, tokens(B,C), cache, carry, block_table,

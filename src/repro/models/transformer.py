@@ -230,7 +230,7 @@ def lm_init_cache(params, cfg: ModelConfig, batch_size: int, max_len: int,
 
 def lm_init_paged_cache(params, cfg: ModelConfig, batch_size: int,
                         num_blocks: int, block_size: int, max_len: int,
-                        dtype=jnp.bfloat16):
+                        dtype=jnp.bfloat16, kv_dtype=None):
     """Paged serve-cache pytree (leading n_super axis, like `lm_init_cache`).
 
     Full-attention layers hold a GLOBAL pool of ``num_blocks`` pages (+1
@@ -238,10 +238,16 @@ def lm_init_paged_cache(params, cfg: ModelConfig, batch_size: int,
     leaves carry no batch dim.  Sliding-window layers keep per-row ring
     buffers (already O(window) — paging them buys < one page per row) and
     mamba/rwkv layers keep their O(1) per-row recurrent state; both are
-    scattered on admit exactly as in the contiguous engine."""
+    scattered on admit exactly as in the contiguous engine.
+
+    ``kv_dtype`` overrides the POOL leaves' storage dtype only (int8/fp8
+    adds per-slot float32 scale leaves — see ``attn.init_paged_kv_cache``);
+    window rings and recurrent state stay in ``dtype``, since they are
+    per-row O(window)/O(1) state, not the HBM-dominant paged working set."""
     n_super = num_superblocks(params)
     if n_super == 0:
         return {}
+    pool_dtype = dtype if kv_dtype is None else kv_dtype
 
     def one_layer_cache(i):
         kind = cfg.layer_kind(i)
@@ -251,7 +257,7 @@ def lm_init_paged_cache(params, cfg: ModelConfig, batch_size: int,
                 return attn.init_kv_cache(cfg, batch_size, max_len, dtype,
                                           window=w)
             return attn.init_paged_kv_cache(cfg, num_blocks, block_size,
-                                            dtype)
+                                            pool_dtype)
         if kind == "mamba":
             return ssm_mod.mamba_init_state(cfg, batch_size)
         if kind == "rwkv":
@@ -632,16 +638,27 @@ def _commit_paged_writes(cache):
             pend = lc["pending"]
             if "latent" in pend:        # MLA: one compressed row per token
                 sup = jnp.arange(lc["latent_pages"].shape[0])[:, None]
-                out[lname] = {
+                new_l = {
                     "latent_pages": lc["latent_pages"].at[
                         sup, pend["page"], pend["off"]].set(pend["latent"])}
+                if "latent_scale" in pend:   # quantized: scales commit with
+                    new_l["latent_scales"] = lc["latent_scales"].at[
+                        sup, pend["page"], pend["off"]].set(
+                            pend["latent_scale"])
+                out[lname] = new_l
                 continue
             sup = jnp.arange(lc["k_pages"].shape[0])[:, None]   # (n_super, 1)
-            out[lname] = {
+            new_l = {
                 "k_pages": lc["k_pages"].at[sup, pend["page"],
                                             pend["off"]].set(pend["k"]),
                 "v_pages": lc["v_pages"].at[sup, pend["page"],
                                             pend["off"]].set(pend["v"])}
+            if "k_scale" in pend:       # quantized: one scatter per scale leaf
+                new_l["k_scales"] = lc["k_scales"].at[
+                    sup, pend["page"], pend["off"]].set(pend["k_scale"])
+                new_l["v_scales"] = lc["v_scales"].at[
+                    sup, pend["page"], pend["off"]].set(pend["v_scale"])
+            out[lname] = new_l
         else:
             out[lname] = lc
     return out

@@ -157,3 +157,72 @@ def load_terms(path: str) -> RooflineTerms:
         d = json.load(f)
     keys = {f.name for f in dataclasses.fields(RooflineTerms)}
     return RooflineTerms(**{k: v for k, v in d.items() if k in keys})
+
+
+# ---------------------------------------------------------------------------
+# Paged-decode HBM-bytes-per-token model (quantized KV storage)
+# ---------------------------------------------------------------------------
+
+KV_DTYPE_BYTES = {"f32": 4, "bf16": 2, "int8": 1, "fp8": 1}
+_SCALE_BYTES = 4                     # scales are always float32
+
+
+def decode_kv_bytes_per_token(cfg: ModelConfig, context_len: int,
+                              kv_dtype: str = "f32") -> float:
+    """KV-cache HBM bytes ONE decode step streams per sequence: every
+    attention layer reads its whole visible context through the block table
+    (full layers: ``context_len`` slots; window layers: ``min(window,
+    context_len)``; MLA: compressed ``kv_lora_rank`` rows instead of 2·KV·hd)
+    plus — under quantized storage — one f32 scale per slot per KV head
+    (per slot for MLA).  Writes (one token) are negligible against the
+    context read and are omitted; recurrent layers stream O(1) state, also
+    omitted.  This is the term quantization attacks: params and activations
+    are untouched."""
+    if kv_dtype not in KV_DTYPE_BYTES:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
+    vb = KV_DTYPE_BYTES[kv_dtype]
+    quantized = kv_dtype in ("int8", "fp8")
+    total = 0.0
+    for i in range(cfg.num_layers):
+        if cfg.layer_kind(i % cfg.pattern_period) != "attn":
+            continue
+        w = cfg.layer_window(i % cfg.pattern_period)
+        ctx = min(w, context_len) if w > 0 else context_len
+        if cfg.attention == "mla" and cfg.mla_kv_lora_rank:
+            per_slot = cfg.mla_kv_lora_rank * vb
+            if quantized and w <= 0:       # only pool layers carry scales
+                per_slot += _SCALE_BYTES
+        else:
+            per_slot = 2 * cfg.num_kv_heads * cfg.head_dim * vb
+            if quantized and w <= 0:
+                per_slot += 2 * cfg.num_kv_heads * _SCALE_BYTES
+        if w > 0 and quantized:
+            # Window rings stay in the float cache dtype (f32 here) — they
+            # are per-row state outside the pool.
+            per_slot = 2 * cfg.num_kv_heads * cfg.head_dim \
+                * KV_DTYPE_BYTES["f32"]
+        total += ctx * per_slot
+    return total
+
+
+def decode_hbm_bytes_per_token(cfg: ModelConfig, context_len: int,
+                               kv_dtype: str = "f32", batch: int = 1,
+                               param_bytes_per_el: int = 4) -> float:
+    """Total HBM bytes per GENERATED token per sequence for paged decode:
+    the per-sequence KV stream plus the parameter read amortized over the
+    decode batch (every row shares one weight stream per step).  The
+    predicted speedup of a quantized pool at fixed batch is the ratio of
+    these totals — exact when decode is purely bandwidth-bound."""
+    kv = decode_kv_bytes_per_token(cfg, context_len, kv_dtype)
+    params = cfg.param_count(active_only=True) * param_bytes_per_el
+    return kv + params / max(batch, 1)
+
+
+def predicted_quant_speedup(cfg: ModelConfig, context_len: int,
+                            kv_dtype: str, batch: int = 1,
+                            baseline: str = "f32") -> float:
+    """Roofline-predicted decode speedup of ``kv_dtype`` over ``baseline``
+    at the same batch — an upper bound measured runs are checked against
+    in ``benchmarks/run.py --only serve_quant``."""
+    return (decode_hbm_bytes_per_token(cfg, context_len, baseline, batch)
+            / decode_hbm_bytes_per_token(cfg, context_len, kv_dtype, batch))

@@ -291,6 +291,14 @@ class RadixCache:
                 drop(c)
             self.pool.unpin(n.page)
             self.evicted_pages += 1
-        drop(victim)
+            # Dropped nodes sit in parent<->children reference cycles that
+            # only the cyclic GC would reclaim; break them and clear the
+            # carry so snapshot buffers (device window rings / recurrent
+            # states) free by refcount the moment the subtree is unlinked,
+            # not at some later gc.collect() under memory pressure.
+            n.carry = None
+            n.children = {}
+            n.parent = None
         del victim.parent.children[victim.key]
+        drop(victim)
         return True

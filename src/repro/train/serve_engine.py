@@ -77,6 +77,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import quant
 from repro.distributed import sharding as shd
 from repro.launch import mesh as mesh_lib
 from repro.models import common as model_common
@@ -192,7 +193,7 @@ class ServeEngine:
                  prefill_cache_size: int = 8,
                  spec_decode: bool = False, gamma: int = 4,
                  draft_depth: Optional[int] = None, draft_params=None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, kv_dtype=None):
         # Same RNG-layout guard as the train engine: sampled bits must not
         # depend on the mesh the categorical runs under.
         if "JAX_THREEFRY_PARTITIONABLE" not in os.environ:
@@ -211,6 +212,17 @@ class ServeEngine:
         self.block_size = block_size
         self.num_blocks = num_blocks          # None: full (no overcommit)
         self.prefill_cache_size = prefill_cache_size
+        # kv_dtype overrides the PAGED POOL's storage dtype only ('f32'/
+        # 'bf16'/'int8'/'fp8' or a dtype; None keeps cache_dtype).  int8/fp8
+        # store quantized pages + per-slot f32 scales and turn the greedy
+        # parity contract into a tolerance lane (see launch/serve.py).
+        self.kv_dtype = (quant.resolve_kv_dtype(kv_dtype)
+                         if isinstance(kv_dtype, str) else kv_dtype)
+        if self.kv_dtype is not None and quant.is_quantized(self.kv_dtype) \
+                and not paged:
+            raise ValueError("quantized kv_dtype requires paged=True (scales "
+                             "are per-POOL-PAGE state; the contiguous cache "
+                             "has no page machinery to carry them)")
         p_struct = jax.eval_shape(lambda t: t, params)
         self.param_shardings = shd.params_shardings(
             p_struct, self.mesh, fsdp=fsdp, moe_fsdp=moe_fsdp, layout=layout)
@@ -486,6 +498,30 @@ class ServeEngine:
     def max_blocks(self) -> int:
         return -(-self.max_len // self.block_size)
 
+    def kv_bytes_per_token(self, kv_dtype="engine") -> float:
+        """HBM bytes ONE cached token costs in the paged pool (all layers,
+        scale leaves included) — the admission math is unchanged by
+        quantization (same page counts), so this ratio vs the f32 pool IS
+        the quantized mode's capacity/bandwidth win.  ``kv_dtype='engine'``
+        uses this engine's storage mode; pass an explicit dtype (or None
+        for cache_dtype) to price an alternative.  Abstract eval only —
+        nothing is allocated."""
+        if not self.paged:
+            raise ValueError("kv_bytes_per_token is defined for paged "
+                             "engines (pool pages + scales)")
+        kv = self.kv_dtype if kv_dtype == "engine" else kv_dtype
+        struct = jax.eval_shape(functools.partial(
+            self.api.init_paged_cache, cfg=self.cfg, batch_size=1,
+            num_blocks=1, block_size=self.block_size, max_len=self.max_len,
+            dtype=self.cache_dtype, kv_dtype=kv), self.params)
+        total = 0.0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(struct)[0]:
+            if steps_lib._is_paged_leaf(path):
+                # num_blocks=1 pools have 2 pages (1 + trash); halve to
+                # price the real page.
+                total += leaf.size * jnp.dtype(leaf.dtype).itemsize / 2
+        return total / self.block_size
+
     def _paged_steps(self, batch: int, temperature: float, num_blocks: int):
         """Compiled (decode, admit, sh, carry_sh, init_cache, init_carry)
         for paged continuous batching at one (batch, pool) size."""
@@ -495,7 +531,8 @@ class ServeEngine:
             init_cache_fn = functools.partial(
                 self.api.init_paged_cache, cfg=self.cfg, batch_size=batch,
                 num_blocks=num_blocks, block_size=self.block_size,
-                max_len=self.max_len, dtype=self.cache_dtype)
+                max_len=self.max_len, dtype=self.cache_dtype,
+                kv_dtype=self.kv_dtype)
             init_carry_fn = functools.partial(
                 self.api.init_prefill_carry, cfg=self.cfg,
                 max_len=self.max_len, dtype=self.cache_dtype)

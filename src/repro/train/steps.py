@@ -237,11 +237,17 @@ def make_prefill_step(cfg: ModelConfig, sample: bool = False,
 
 
 def _is_paged_leaf(path) -> bool:
-    """Paged pool leaves (k_pages/v_pages, MLA latent_pages) have no batch
-    dim: per-row freeze/scatter logic must skip them (their per-row no-op is
-    the trash-page write redirect inside ``attn_decode_paged``)."""
+    """Paged pool leaves (k_pages/v_pages, MLA latent_pages, and — under
+    quantized storage — their per-slot scale leaves) have no batch dim:
+    per-row freeze/scatter logic must skip them (their per-row no-op is the
+    trash-page write redirect inside ``attn_decode_paged``).  Listing the
+    scale leaves HERE is what keeps scales in lockstep with their pages
+    through every page-level mechanism: the COW copy-step duplicates them
+    alongside the page, prefix admission skips them (shared pages already
+    hold the right scales), and the freeze select leaves them alone."""
     return any(str(getattr(p, "key", ""))
-               in ("k_pages", "v_pages", "latent_pages") for p in path)
+               in ("k_pages", "v_pages", "latent_pages",
+                   "k_scales", "v_scales", "latent_scales") for p in path)
 
 
 def make_serve_decode_step(cfg: ModelConfig, sample: bool = False,

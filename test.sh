@@ -19,6 +19,11 @@
 #                                     # spec-decode (checkpoint-ring rollback)
 #                                     # + prefix carry snapshots, plus the
 #                                     # carry-lane pool fuzz
+#   bash test.sh --quant-smoke        # fast lane: int8/fp8 KV pages —
+#                                     # quantizer round-trip units, the
+#                                     # tolerance lanes vs the f32 mirror,
+#                                     # COW-with-scales, quantized spec
+#                                     # rollback + prefix parity
 #
 # Test deps are declared in requirements-test.txt (pytest + hypothesis for
 # the pool property fuzz; a seeded fallback generator runs when hypothesis
@@ -52,6 +57,14 @@ if [[ "${1:-}" == "--recurrent-smoke" ]]; then
   set -- tests/test_serving_paged.py tests/test_serving_spec.py \
       tests/test_serving_prefix.py -k \
       "mamba or rwkv or carry or recurrent" -m "not slow" "$@"
+fi
+
+if [[ "${1:-}" == "--quant-smoke" ]]; then
+  shift
+  set -- tests/test_quant.py tests/test_serving_paged.py \
+      tests/test_serving_spec.py tests/test_serving_prefix.py -k \
+      "quant or Quantized or scales or roundtrip or kv_stats" \
+      -m "not slow" "$@"
 fi
 
 if ! python -c "import hypothesis" 2>/dev/null; then

@@ -588,3 +588,131 @@ def test_summarize_empty_results_is_nan():
     assert s["requests"] == 0 and s["generated_tokens"] == 0
     assert math.isnan(s["ttft_p50_s"]) and math.isnan(s["ttft_p95_s"])
     assert s["tokens_per_s"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Quantized pages (kv_dtype='int8'): shared bytes identical across rows,
+# COW clones carry their scales, evicted carry snapshots free promptly
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_quantized_matches_quantized_cold():
+    """Prefix sharing stays a numerical no-op ON THE SAME QUANTIZED POOL:
+    published int8 pages are the bytes the hitting request's own prefill
+    would have written (quantize-at-write is content+position
+    deterministic), so hit streams are byte-identical to serving each
+    request cold against a fresh int8 pool — and the hit pattern matches
+    the float lane exactly (admission math is dtype-invariant)."""
+    cfg = CFG_DENSE
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                      prefix_cache=True, kv_dtype="int8")
+    reqs = _shared_workload(cfg)
+    sched = ContinuousScheduler(eng, max_batch=1, chunk_len=4)
+    results = sched.run(reqs)
+    assert [r.prefix_tokens for r in results] == [0, 12, 12, 11, 12, 4]
+    cold = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                       kv_dtype="int8")
+    for req, res in zip(reqs, results):
+        want = ContinuousScheduler(cold, max_batch=1,
+                                   chunk_len=4).run([req])[0]
+        np.testing.assert_array_equal(res.tokens, want.tokens)
+
+
+def test_prefix_quantized_composes_with_spec_decode():
+    """All three compose on one engine: radix hits + speculative rollback
+    + int8 pages, byte-identical to the non-spec prefix-cached run on the
+    same quantized pool."""
+    cfg = CFG_DENSE
+    params = _params(cfg)
+    reqs = _shared_workload(cfg)
+    base = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                       prefix_cache=True, kv_dtype="int8")
+    want = ContinuousScheduler(base, max_batch=2, chunk_len=4).run(reqs)
+    eng = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                      prefix_cache=True, kv_dtype="int8", spec_decode=True,
+                      gamma=3, draft_depth=2)
+    sched = ContinuousScheduler(eng, max_batch=2, chunk_len=4)
+    results = sched.run(reqs)
+    for a, b in zip(want, results):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert sched.prefix_hits >= 4
+    assert sched.spec_stats()["spec_rounds"] > 0
+
+
+def test_cow_page_copy_clones_scales_with_pages():
+    """Satellite lock-in (``make_page_copy_step``): the exact-boundary COW
+    clone must copy the scale slots ALONGSIDE the int8 page bytes — a
+    clone with zeroed scales would dequantize the shared prompt slots to
+    zero and silently corrupt the rerun.  Checked directly on the cache
+    leaves: after the COW admission the clone page equals the source page
+    in both ``k_pages``/``v_pages`` and ``k_scales``/``v_scales``, and the
+    published source's scales are non-trivial (pages really are
+    quantized)."""
+    cfg = CFG_DENSE
+    eng = ServeEngine(cfg, _params(cfg), max_len=48, paged=True,
+                      block_size=4, prefix_cache=True, kv_dtype="int8")
+    state = eng.continuous_state(1, num_blocks=6)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+
+    def serve(state, match=None):
+        state, job = eng.begin_prefill(state, 0, prompt, 1, chunk_len=4,
+                                       match=match)
+        tok = None
+        while not job.done:
+            state, tok = eng.prefill_chunk(state, job)
+        state = eng.admit_paged(state, job, tok)
+        state = eng.free_slot(state, 0)
+        return state, tok
+
+    state, tok_a = serve(state)                  # publishes 2 pinned pages
+    match = eng.prefix_match(state, prompt)      # exact boundary: COW
+    assert match is not None and match.cow_last
+    src = match.pages[-1]
+    state, job = eng.begin_prefill(state, 0, prompt, 1, chunk_len=4,
+                                   match=match)
+    dst = int(state.pool.table[0, len(match.pages) - 1])
+    assert dst != src
+    for layer in state.cache.values():           # clone == source, scales too
+        for name in ("k_pages", "v_pages", "k_scales", "v_scales"):
+            leaf = np.asarray(layer[name])
+            np.testing.assert_array_equal(leaf[..., dst, :, :, :],
+                                          leaf[..., src, :, :, :])
+        assert np.abs(np.asarray(layer["k_scales"])[..., src, :, :, :]).max() \
+            > 1e-6
+    tok = None
+    while not job.done:                          # rerun matches publisher
+        state, tok = eng.prefill_chunk(state, job)
+    assert int(np.asarray(tok)[0, 0]) == int(np.asarray(tok_a)[0, 0])
+    state = eng.admit_paged(state, job, tok)
+    state.pool.check_invariants()
+
+
+def test_radix_eviction_releases_carry_snapshots_without_gc():
+    """Satellite lock-in (``RadixCache.evict_one``): dropped subtree nodes
+    form parent<->children reference cycles, so without explicit clearing
+    an evicted node's carry snapshot (device ring/state buffers) would
+    stay alive until a cyclic gc.collect().  Eviction must release it by
+    REFCOUNT, immediately."""
+    import gc
+    import weakref
+
+    pool = _pool_with_row(12)
+    radix = RadixCache(pool)
+    prompt = np.arange(12, dtype=np.int32)
+    carry = np.zeros(4)              # ndarray: weakref-able carry payload
+    radix.publish(prompt, list(pool.row_pages(0)), 3, carry=carry,
+                  carry_tokens=8)
+    pool.free(0)
+    ref = weakref.ref(carry)
+    del carry
+    gc.disable()
+    try:
+        while radix.evict_one():
+            pass
+        assert radix.num_nodes == 0
+        assert ref() is None         # freed by refcount, no cycle GC needed
+    finally:
+        gc.enable()
+    pool.check_invariants()

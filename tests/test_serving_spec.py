@@ -357,3 +357,68 @@ def test_admission_aging_prevents_starvation():
     # every request still completes with its full budget
     for req, res in zip(_starvation_workload(cfg)[0], results):
         assert len(res.new_tokens) == req.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# Quantized pages (kv_dtype='int8'): spec is a numerical no-op ON THE SAME
+# QUANTIZED POOL — rollback/verify over int8 pages, byte for byte
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["dense", "window", "mla"])
+def test_spec_quantized_matches_quantized_paged(arch):
+    """Quantization turns solo parity into a tolerance lane, but
+    speculation must STAY a numerical no-op relative to non-speculative
+    decode on the same int8 pool: verify writes quantize deterministically
+    (same accepted context -> same page bytes, and rejected slots beyond
+    the rewound cursor are requantized identically before they are ever
+    readable), and the deferred dense-select path round-trips its values
+    through the storage dtype, so streams match byte for byte.  The
+    rejection-heavy truncated draft keeps acceptance well below 1 —
+    ``truncate_row`` rollback over quantized pages runs every few
+    rounds."""
+    cfg = ARCH_CFGS[arch]
+    params = _params(cfg)
+    reqs = _requests(cfg)
+    plain = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                        kv_dtype="int8")
+    base = ContinuousScheduler(plain, max_batch=2, chunk_len=4).run(reqs)
+    spec = ServeEngine(cfg, params, max_len=48, paged=True, block_size=4,
+                       kv_dtype="int8", spec_decode=True, gamma=3,
+                       draft_depth=2)
+    sched = ContinuousScheduler(spec, max_batch=2, chunk_len=4)
+    results = sched.run(reqs)
+    for a, b in zip(base, results):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    stats = sched.spec_stats()
+    assert stats["spec_rounds"] > 0
+    assert sched.acceptance_rate < 1.0          # rollback actually ran
+    assert sched.kv_stats()["kv_dtype"] == "int8"
+
+
+def test_spec_quantized_zeroL_draft_acceptance_and_stream():
+    """A ``copying_zeroL`` expansion's truncated draft is function-
+    preserving, but under int8 storage the DRAFT proposes from its own
+    contiguous FLOAT cache while the target verifies through quantized
+    pages — the two no longer see bit-identical context, so acceptance
+    drops from exactly 1.0 to merely high (measured 0.92 here; near-tie
+    argmax flips only).  The output stream is still exact: zeroL's new
+    blocks contribute zero regardless of what their pages quantize to, so
+    the expanded model on an int8 pool equals the pre-expansion model on
+    an int8 pool byte for byte."""
+    cfg2, cfg4 = CFG_DENSE.with_depth(2), CFG_DENSE.with_depth(4)
+    p2 = _params(cfg2, seed=1)
+    p4 = exp.expand_params(p2, cfg2, 4, "copying_zeroL")
+    eng = ServeEngine(cfg4, p4, max_len=48, paged=True, block_size=4,
+                      kv_dtype="int8", spec_decode=True, gamma=3,
+                      draft_depth=2)
+    reqs = _requests(cfg2)[:4]
+    sched = ContinuousScheduler(eng, max_batch=2, chunk_len=4)
+    results = sched.run(reqs)
+    assert sched.acceptance_rate >= 0.9
+    # the stream equals the pre-expansion model on its own int8 pool
+    base = ServeEngine(cfg2, p2, max_len=48, paged=True, block_size=4,
+                       kv_dtype="int8")
+    want = ContinuousScheduler(base, max_batch=2, chunk_len=4).run(reqs)
+    for a, b in zip(want, results):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
