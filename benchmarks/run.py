@@ -1155,6 +1155,153 @@ def bench_serve_quant(fast=False):
               "run `--only serve_quant` for the mesh layout", flush=True)
 
 
+# ---------------------------------------------------------------------------
+# Fault-tolerant serving: goodput under a seeded fault storm + crash recovery
+# ---------------------------------------------------------------------------
+
+def bench_serve_faults(fast=False):
+    """Serving robustness cost, in three measured phases on the prefix-cache
+    paged engine (every fault site live: pool, radix, prefill, decode,
+    table upload):
+
+    1. ``clean``    — the same Poisson workload with the NULL fault plane:
+       the goodput baseline.
+    2. ``storm``    — a seeded Bernoulli fault storm
+       (``FaultPlane.seeded``, transient ``FaultError`` at every site, no
+       crashes) with the scheduler's bounded retry containment.  Reported:
+       goodput vs clean (completed-token rate — failed rows don't count),
+       retries, per-site hit counts.  The containment guarantee under test:
+       every request still finishes with a structured reason and completed
+       streams stay byte-identical to the clean run.
+    3. ``recovery`` — a ``sched.iter`` crash tape under periodic
+       snapshots, then :meth:`restore` on a fresh scheduler over the same
+       engine.  Reported: recovery-time-to-first-resumed-token (resumed
+       arrivals restart at 0, so the minimum resumed TTFT IS that time —
+       mostly radix-hit re-prefill), full restore wall time, and whether
+       the merged streams are byte-identical to the clean run.
+
+    Writes ``BENCH_serve_faults.json``."""
+    _fake_devices_for_serve()
+    import jax
+    import numpy as np
+    from repro.configs.base import ModelConfig
+    from repro.launch import mesh as mesh_lib
+    from repro.models import registry
+    from repro.train import faults as faults_lib
+    from repro.train.faults import CrashError, FaultPlane
+    from repro.train.serve_engine import ServeEngine
+    from repro.train.serve_scheduler import (ContinuousScheduler, Request,
+                                             summarize)
+
+    BS = 8
+    P, G = 24, 16                  # 5 pages per row committed
+    CFG = ModelConfig(name="bench-faults", family="dense", num_layers=4,
+                      d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                      vocab_size=256, max_seq_len=256)
+    N = 6 if fast else 16
+    MAXB = 4
+    num_blocks = 6 * MAXB          # headroom: pool.alloc faults still admit
+    max_len = P + G + 8
+    STORM_RATE, STORM_SEED = 0.05, 7
+    CRASH_AT, SNAP_EVERY = 10, 4   # crash mid-run, ≤3 iterations replayed
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(0.002, N))
+    reqs = [Request(prompt=rng.integers(0, CFG.vocab_size,
+                                        (P,)).astype(np.int32),
+                    max_new_tokens=G, arrival_s=float(a), uid=i)
+            for i, a in enumerate(arrivals)]
+    params = registry.get_model(CFG).init(jax.random.PRNGKey(0), CFG)
+
+    def sched_for(eng, **kw):
+        return ContinuousScheduler(eng, max_batch=MAXB,
+                                   num_blocks=num_blocks, max_retries=3,
+                                   retry_backoff_s=1e-4, **kw)
+
+    def streams(results):
+        return {r.uid: [int(t) for t in r.new_tokens] for r in results
+                if r.completed}
+
+    n_dev = len(jax.devices())
+    meshes = {"single": mesh_lib.single_device_mesh()}
+    if n_dev > 1:
+        meshes[f"mesh{n_dev}"] = mesh_lib.make_train_mesh("host")
+    out = {"requests": N, "block_size": BS, "num_blocks": num_blocks,
+           "prompt_tokens": P, "gen_tokens": G, "max_batch": MAXB,
+           "storm": {"rate": STORM_RATE, "seed": STORM_SEED},
+           "crash": {"at_iteration": CRASH_AT,
+                     "snapshot_every": SNAP_EVERY},
+           "arch": CFG.name, "layouts": {}}
+    for name, mesh in meshes.items():
+        eng = ServeEngine(CFG, params, mesh=mesh, max_len=max_len,
+                          paged=True, block_size=BS, prefix_cache=True)
+        warm = sched_for(eng)
+        warm.warmup(reqs)
+
+        t0 = time.perf_counter()
+        clean_res = sched_for(eng).run(reqs)
+        clean = summarize(clean_res, time.perf_counter() - t0)
+        clean_streams = streams(clean_res)
+
+        eng.faults = FaultPlane.seeded(STORM_RATE, seed=STORM_SEED)
+        storm_s = sched_for(eng)
+        t0 = time.perf_counter()
+        storm_res = storm_s.run(reqs)
+        storm = summarize(storm_res, time.perf_counter() - t0)
+        stats = storm_s.fault_stats()
+        eng.faults = faults_lib.NULL
+        storm_ok = all(clean_streams[u] == s
+                       for u, s in streams(storm_res).items())
+
+        eng.faults = FaultPlane.parse(f"sched.iter:{CRASH_AT}:crash")
+        crash_s = sched_for(eng, snapshot_every=SNAP_EVERY)
+        try:
+            crash_s.run(reqs)
+            raise RuntimeError("crash tape never fired")
+        except CrashError:
+            snap = crash_s.last_snapshot
+        eng.faults = faults_lib.NULL
+        t0 = time.perf_counter()
+        resumed = sched_for(eng).restore(snap)
+        recovery_wall = time.perf_counter() - t0
+        inflight_uids = {item["uid"] for item in snap["inflight"]}
+        first_tok = min((r.ttft_s for r in resumed
+                         if r.uid in inflight_uids and len(r.new_tokens)),
+                        default=float("nan"))
+        resume_ok = (streams(resumed) == clean_streams)
+
+        goodput_ratio = storm["goodput"] / max(clean["goodput"], 1e-9)
+        out["layouts"][name] = {
+            "clean": clean, "storm": storm,
+            "goodput_ratio": goodput_ratio,
+            "storm_fault_stats": stats,
+            "storm_completed_byte_identical": storm_ok,
+            "recovery": {
+                "snapshot_inflight": len(snap["inflight"]),
+                "snapshot_queued": len(snap["queued"]),
+                "snapshot_done": len(snap["done"]),
+                "first_resumed_token_s": first_tok,
+                "restore_wall_s": recovery_wall,
+                "resume_byte_identical": resume_ok}}
+        _row(f"serve_faults/{name}", storm["wall_s"] * 1e6,
+             f"goodput={storm['goodput']:.1f};"
+             f"clean={clean['goodput']:.1f};"
+             f"ratio={goodput_ratio:.2f};"
+             f"retries={stats['retries']};failed={stats['failed']};"
+             f"sites={len(stats['fault_sites'])};"
+             f"storm_parity={storm_ok};"
+             f"recover_first_tok_ms={first_tok * 1e3:.1f};"
+             f"restore_ms={recovery_wall * 1e3:.1f};"
+             f"resume_parity={resume_ok}")
+    if n_dev > 1:
+        with open("BENCH_serve_faults.json", "w") as f:
+            json.dump(out, f, indent=1)
+        print("# wrote BENCH_serve_faults.json", flush=True)
+    else:
+        print("# single device only (jax initialized before "
+              "bench_serve_faults); BENCH_serve_faults.json left untouched "
+              "— run `--only serve_faults` for the mesh layout", flush=True)
+
+
 BENCHES = {
     "expansion_init": bench_expansion_init,
     "copying_variants": bench_copying_variants,
@@ -1167,13 +1314,15 @@ BENCHES = {
     "kernels": bench_kernels,
     # serving benches: mutate the jax environment when they run first
     # (`--only serve` / `--only serve_continuous` / `--only serve_paged`
-    #  / `--only serve_spec` / `--only serve_prefix` / `--only serve_quant`)
+    #  / `--only serve_spec` / `--only serve_prefix` / `--only serve_quant`
+    #  / `--only serve_faults`)
     "serve": bench_serve,
     "serve_continuous": bench_serve_continuous,
     "serve_paged": bench_serve_paged,
     "serve_spec": bench_serve_spec,
     "serve_prefix": bench_serve_prefix,
     "serve_quant": bench_serve_quant,
+    "serve_faults": bench_serve_faults,
     "remat": bench_remat,
 }
 

@@ -39,8 +39,16 @@ def _spec_str(x) -> str:
 
 
 def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None,
-         keep: int = 3) -> str:
-    """Atomically save `tree` (params/opt state/...) at `step`."""
+         keep: int = 3, faults=None) -> str:
+    """Atomically save `tree` (params/opt state/...) at `step`.
+
+    ``faults`` (a ``train.faults`` plane) arms the ``ckpt.write`` site in
+    the torn-write window — after arrays.npz lands, before the manifest —
+    modeling preemption mid-write: the step directory is left as a
+    ``.tmp`` that :func:`all_steps` ignores and the next save sweeps, so
+    the previous checkpoint stays the restorable latest."""
+    from repro.train import faults as faults_lib
+    plane = faults_lib.resolve(faults)
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:09d}")
     tmp = final + ".tmp"
@@ -51,6 +59,7 @@ def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None,
     leaves, treedef = _flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(jax.device_get(x)) for i, x in enumerate(leaves)}
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    plane.fire("ckpt.write")
     paths = [jax.tree_util.keystr(p)
              for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
     manifest = {
@@ -186,7 +195,7 @@ class AsyncCheckpointer:
         self._error: Optional[BaseException] = None
 
     def save(self, directory: str, step: int, tree: Any,
-             metadata: Optional[dict] = None, keep: int = 3):
+             metadata: Optional[dict] = None, keep: int = 3, faults=None):
         self.wait()
         import jax.numpy as jnp
         # Async device-side snapshot: decouples the checkpoint from buffer
@@ -200,7 +209,8 @@ class AsyncCheckpointer:
         def run():
             try:
                 host_tree = jax.tree.map(lambda x: np.asarray(x), snap)
-                save(directory, step, host_tree, metadata, keep)
+                save(directory, step, host_tree, metadata, keep,
+                     faults=faults)
             except BaseException as e:   # surfaced on next wait()
                 self._error = e
 

@@ -79,6 +79,21 @@ e.g. the pre-expansion checkpoint of the served model) instead of
 truncating.  ``--age-limit S`` bounds first-fit admission starvation
 (aging).  Greedy streams are byte-identical either way; the run reports
 the draft acceptance rate.
+
+Robustness flags (with ``--continuous``; see ``train/faults`` and the
+scheduler's lifecycle hardening): ``--deadline-s S`` finishes any request
+``deadline`` once S seconds pass from its arrival (queued or mid-decode);
+``--queue-limit N`` bounds the arrived queue, shedding overflow with a
+structured ``shed`` rejection; ``--retries K`` bounds retry-with-backoff
+for transient faults before a request fails alone (the batch keeps
+serving); ``--faults TAPE`` arms deterministic fault injection — either
+an explicit tape ``site:nth[:kind]`` joined by commas (e.g.
+``pool.alloc:3,engine.decode:5,sched.iter:40:crash``) or a seeded storm
+``storm:rate[:seed]``; ``--snapshot-every N`` serializes host-side
+in-flight state every N iteration boundaries (the crash-recovery input:
+``ContinuousScheduler.restore`` re-prefills prompt + emitted tokens for
+byte-identical resumed greedy streams).  The run reports per-reason
+finish counts and goodput (completed tokens/s) next to raw tokens/s.
 """
 from __future__ import annotations
 
@@ -92,6 +107,7 @@ from repro import configs as cfglib
 from repro.checkpoint import checkpointer as ckpt
 from repro.launch import mesh as mesh_lib
 from repro.models import registry
+from repro.train import faults as faults_lib
 from repro.train.serve_engine import ServeEngine
 from repro.train.serve_scheduler import (ContinuousScheduler, Request,
                                          summarize)
@@ -182,6 +198,32 @@ def main(argv=None):
     ap.add_argument("--age-limit", type=float, default=None,
                     help="admission aging threshold in seconds (paged "
                          "first-fit blocks for the oldest request past it)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline from arrival (finish reason "
+                         "'deadline' past it — queued, prefilling, or "
+                         "mid-decode; partial tokens are returned)")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bound on the arrived-but-unadmitted queue; "
+                         "overflow requests are shed with a structured "
+                         "rejection instead of queueing unboundedly")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="bounded retry-with-backoff for transient "
+                         "admission/prefill/decode faults before failing "
+                         "the one affected request")
+    ap.add_argument("--faults", default=None, metavar="TAPE",
+                    help="deterministic fault injection: 'site:nth[:kind]' "
+                         "entries joined by commas (kind: fault|crash; "
+                         "sites: " + ", ".join(faults_lib.SITES)
+                         + ") or 'storm:rate[:seed]' for a seeded "
+                         "Bernoulli fault storm")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot host-side in-flight serving state every "
+                         "N iteration boundaries (crash recovery: restore "
+                         "re-prefills prompt+emitted for byte-identical "
+                         "resumed greedy streams; 0: off)")
+    ap.add_argument("--invariant-every", type=int, default=0,
+                    help="audit pool refcounts/commitments + radix pins "
+                         "every N scheduler iterations (0: off)")
     args = ap.parse_args(argv)
     if args.paged and not args.continuous:
         raise SystemExit("--paged requires --continuous")
@@ -220,7 +262,7 @@ def main(argv=None):
                          draft_depth=args.spec_depth,
                          draft_params=draft_params,
                          prefix_cache=args.prefix_cache,
-                         kv_dtype=args.kv_dtype)
+                         kv_dtype=args.kv_dtype, faults=args.faults)
 
     if args.continuous:
         shared = rng.integers(0, cfg.vocab_size,
@@ -240,7 +282,12 @@ def main(argv=None):
                                     eos_id=args.eos, seed=args.seed,
                                     chunk_len=args.chunk_len,
                                     overlap=not args.no_overlap,
-                                    admission_age_s=args.age_limit)
+                                    admission_age_s=args.age_limit,
+                                    deadline_s=args.deadline_s,
+                                    queue_limit=args.queue_limit,
+                                    max_retries=args.retries,
+                                    invariant_every=args.invariant_every,
+                                    snapshot_every=args.snapshot_every)
         sched.warmup(reqs)             # compile outside the timed run
         t0 = time.perf_counter()
         results = sched.run(reqs, on_finish=lambda r: print(
@@ -255,6 +302,14 @@ def main(argv=None):
         print(f"aggregate tokens/s={stats['tokens_per_s']:.1f}  "
               f"ttft p50={stats['ttft_p50_s'] * 1e3:.1f}ms "
               f"p95={stats['ttft_p95_s'] * 1e3:.1f}ms")
+        fs = sched.fault_stats()
+        if stats["completed"] < stats["requests"] or fs["retries"] \
+                or args.faults:
+            reasons = " ".join(f"{k}={v}" for k, v in
+                               sorted(stats["finish_reasons"].items()))
+            print(f"lifecycle: {reasons} retries={fs['retries']} "
+                  f"goodput tokens/s={stats['goodput']:.1f} "
+                  f"(all: {stats['tokens_per_s_all']:.1f})")
         if args.paged:
             ks = sched.kv_stats()
             print(f"kv storage: dtype={ks['kv_dtype']} "

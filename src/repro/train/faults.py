@@ -1,0 +1,215 @@
+"""Deterministic fault injection for the serving stack.
+
+A production serving engine dies in ways a clean benchmark never shows:
+an allocation fails mid-iteration, a table upload is interrupted, a
+checkpoint write is torn by preemption.  The robustness contract of the
+scheduler ("one failing request never takes down the batch", "a crash
+loses no admitted request") is only testable if those faults can be
+*produced on demand, deterministically* — so this module gives every
+fragile operation in the stack a named **fault site** and routes it
+through one ``FaultPlane``:
+
+  * ``pool.alloc``           KVBlockPool page allocation (free-list pop)
+  * ``pool.evict``           KVBlockPool eviction callback into the radix tree
+  * ``radix.publish``        RadixCache prefix publish after prefill
+  * ``radix.match``          RadixCache prefix lookup at admission
+  * ``engine.prefill_chunk`` ServeEngine chunked-prefill dispatch
+  * ``engine.decode``        ServeEngine masked-decode / speculation dispatch
+  * ``engine.table_upload``  ServeEngine block-table H2D re-upload
+  * ``engine.draft_prefill`` ServeEngine speculative draft B=1 prefill
+  * ``ckpt.write``           checkpoint.checkpointer torn write (arrays
+                             written, manifest not — the preemption window)
+  * ``sched.iter``           ContinuousScheduler iteration boundary (used
+                             for scheduled crashes, see below)
+
+Sites **fire before the operation mutates any state**, so an injected
+fault leaves the pool/tree/engine exactly as it was and a bounded retry
+is always safe.  Two failure kinds are modeled:
+
+  * ``fault`` — raises :class:`FaultError`, a *transient* error the
+    scheduler is expected to contain (retry with backoff, or fail the one
+    affected request and keep serving the rest of the batch);
+  * ``crash`` — raises :class:`CrashError`, which the scheduler must NOT
+    catch: it models the process dying (SIGKILL, machine loss).  Recovery
+    is ``ContinuousScheduler.snapshot()`` / ``restore`` — re-prefilling
+    each interrupted request's prompt + emitted tokens (byte-identical
+    resume; K/V depends only on the token prefix).
+
+Two drivers, both deterministic:
+
+  * an explicit **tape** — ``[(site, nth, kind), ...]``: the ``nth`` time
+    (1-based) ``site`` fires, raise.  ``FaultPlane.parse`` accepts the
+    compact CLI form ``"site:nth[:kind]"`` joined by commas, e.g.
+    ``--faults pool.alloc:3,engine.decode:5,sched.iter:40:crash``;
+  * a seeded **schedule** — ``FaultPlane.seeded(rate, seed)`` draws one
+    reproducible Bernoulli per site hit (a "fault storm" for benchmarks
+    and fuzz).
+
+When disabled (the default ``NULL`` plane) every site compiles down to a
+single no-op method call — the serving hot path pays one attribute lookup
+and nothing else, and no RNG state exists to perturb determinism.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+SITES = (
+    "pool.alloc",
+    "pool.evict",
+    "radix.publish",
+    "radix.match",
+    "engine.prefill_chunk",
+    "engine.decode",
+    "engine.table_upload",
+    "engine.draft_prefill",
+    "ckpt.write",
+    "sched.iter",
+)
+
+
+class _Injected(RuntimeError):
+    """Base of both injected failure kinds (records where it fired)."""
+
+    def __init__(self, site: str, hit: int):
+        super().__init__(f"injected {self.kind} at {site} (hit {hit})")
+        self.site = site
+        self.hit = hit
+
+
+class FaultError(_Injected):
+    """A transient injected fault at a named site.  The scheduler contract:
+    contain it — retry with backoff where the operation is batch-wide,
+    fail the one affected request where it is per-row — and never let it
+    escape the serving loop."""
+    kind = "fault"
+
+
+class CrashError(_Injected):
+    """An injected process death.  Deliberately NOT a ``FaultError``
+    subclass — containment code catching transient faults must never
+    swallow it: it unwinds the serving loop like a kill -9 would, and the
+    recovery path is snapshot/restore, not retry."""
+    kind = "crash"
+
+
+class FaultPlane:
+    """Named-site fault injector (see module docstring).
+
+    ``counts`` records every site hit whether or not a fault fired, so
+    tests can assert a site was actually exercised — a fault plan against
+    a site the workload never reaches is a vacuous test."""
+
+    def __init__(self):
+        self.counts: Dict[str, int] = {}
+        self._tape: Dict[Tuple[str, int], str] = {}
+        self._rate = 0.0
+        self._rng: Optional[np.random.Generator] = None
+        self._sites: Optional[frozenset] = None
+        self.fired: List[Tuple[str, int, str]] = []
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_tape(cls, tape: Sequence[Tuple[str, int, str]]) -> "FaultPlane":
+        """``tape`` entries are ``(site, nth_hit, kind)`` (or 2-tuples with
+        kind defaulting to 'fault')."""
+        plane = cls()
+        for entry in tape:
+            site, nth = entry[0], int(entry[1])
+            kind = entry[2] if len(entry) > 2 else "fault"
+            if site not in SITES:
+                raise ValueError(f"unknown fault site {site!r} "
+                                 f"(sites: {', '.join(SITES)})")
+            if nth < 1:
+                raise ValueError(f"fault tape hit {nth} < 1 (1-based)")
+            if kind not in ("fault", "crash"):
+                raise ValueError(f"unknown fault kind {kind!r}")
+            plane._tape[(site, nth)] = kind
+        return plane
+
+    @classmethod
+    def seeded(cls, rate: float, seed: int = 0,
+               sites: Optional[Sequence[str]] = None) -> "FaultPlane":
+        """Bernoulli(rate) per site hit from one seeded stream — the same
+        (workload, seed) always faults at the same hits.  ``sites``
+        restricts the storm (default: every site except ``sched.iter``,
+        which only makes sense as an explicit crash point)."""
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"fault rate {rate} outside [0, 1]")
+        plane = cls()
+        plane._rate = rate
+        plane._rng = np.random.default_rng(seed)
+        plane._sites = frozenset(sites if sites is not None
+                                 else set(SITES) - {"sched.iter"})
+        for s in plane._sites:
+            if s not in SITES:
+                raise ValueError(f"unknown fault site {s!r}")
+        return plane
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlane":
+        """CLI form: ``"site:nth[:kind],site:nth[:kind],..."`` or
+        ``"storm:rate[:seed]"`` for a seeded schedule."""
+        spec = spec.strip()
+        if spec.startswith("storm:"):
+            parts = spec.split(":")
+            rate = float(parts[1])
+            seed = int(parts[2]) if len(parts) > 2 else 0
+            return cls.seeded(rate, seed)
+        tape = []
+        for item in spec.split(","):
+            parts = item.strip().split(":")
+            if len(parts) < 2:
+                raise ValueError(f"bad fault spec {item!r} "
+                                 "(want site:nth[:kind])")
+            tape.append((parts[0], int(parts[1]),
+                         parts[2] if len(parts) > 2 else "fault"))
+        return cls.from_tape(tape)
+
+    # -- firing --------------------------------------------------------------
+
+    @property
+    def enabled(self) -> bool:
+        return True
+
+    def fire(self, site: str) -> None:
+        """Record a hit at ``site``; raise if the plan says so.  Always
+        called BEFORE the instrumented operation mutates state."""
+        hit = self.counts.get(site, 0) + 1
+        self.counts[site] = hit
+        kind = self._tape.get((site, hit))
+        if kind is None and self._rng is not None and site in self._sites:
+            if self._rng.random() < self._rate:
+                kind = "fault"
+        if kind is None:
+            return
+        self.fired.append((site, hit, kind))
+        if kind == "crash":
+            raise CrashError(site, hit)
+        raise FaultError(site, hit)
+
+
+class _NullPlane:
+    """Disabled fault plane: ``fire`` is a no-op, shared process-wide.
+    Instrumented call sites cost one method call and no branches."""
+
+    enabled = False
+    counts: Dict[str, int] = {}
+
+    def fire(self, site: str) -> None:
+        return
+
+
+NULL = _NullPlane()
+
+
+def resolve(faults) -> object:
+    """Normalize a constructor argument: None -> the NULL plane, a spec
+    string -> ``FaultPlane.parse``, a plane -> itself."""
+    if faults is None:
+        return NULL
+    if isinstance(faults, str):
+        return FaultPlane.parse(faults)
+    return faults

@@ -48,6 +48,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.train import faults as faults_lib
+
 
 class PoolExhausted(RuntimeError):
     """Raised when an allocation violates the admission contract."""
@@ -63,9 +65,10 @@ class KVBlockPool:
     """
 
     def __init__(self, num_blocks: int, block_size: int, batch: int,
-                 max_blocks: int):
+                 max_blocks: int, faults=None):
         if num_blocks < 1 or block_size < 1:
             raise ValueError(f"bad pool shape ({num_blocks}, {block_size})")
+        self.faults = faults_lib.resolve(faults)
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.batch = batch
@@ -195,8 +198,15 @@ class KVBlockPool:
 
     def _alloc_page(self) -> int:
         """Pop a free page, asking the evictor to reclaim pinned-only pages
-        when the free list is dry (admission guarantees one exists)."""
+        when the free list is dry (admission guarantees one exists).
+
+        Fault sites fire BEFORE any state moves: an injected ``pool.alloc``
+        or ``pool.evict`` fault leaves the free list, refcounts and tables
+        untouched, so the caller may retry (or fail just its own request)
+        without a cleanup pass."""
+        self.faults.fire("pool.alloc")
         while not self._free:
+            self.faults.fire("pool.evict")
             if self.evictor is None or not self.evictor.evict_one():
                 raise PoolExhausted("free list empty and nothing evictable")
         page = self._free.pop()

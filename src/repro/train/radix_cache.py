@@ -170,6 +170,7 @@ class RadixCache:
         than a cold admission — matched pinned-only pages stop being
         evictable) until ``can_admit_prefix`` passes.  Carry configs
         re-clamp to the next-shallower snapshot node automatically."""
+        self.pool.faults.fire("radix.match")
         P = len(prompt)
         path = self._walk(prompt)
         if max_pages is not None:
@@ -214,6 +215,7 @@ class RadixCache:
         carry-bearing configs can match up to it.  Existing nodes win
         (first publisher dedup); returns the number of pages newly
         pinned."""
+        self.pool.faults.fire("radix.publish")
         bs = self.block_size
         node, new = self.root, 0
         for i in range(n_pages):
@@ -231,6 +233,39 @@ class RadixCache:
             node = child
         self.published_pages += new
         return new
+
+    # -- invariants (watchdog: scheduler every N iterations; fuzz always) ---
+
+    def check_invariants(self) -> None:
+        """Pin-count audit against the pool: every tree node holds exactly
+        ONE pin on an allocated page, the pool's per-page pin counts equal
+        the number of tree nodes referencing that page, and the tree's
+        structure is internally consistent (extents grow by one page per
+        level, parent links close, keys are full-page token spans).
+
+        Paired with ``KVBlockPool.check_invariants`` (refcount
+        conservation, commitment <= free + evictable, table/free-list
+        disjointness) this is the serving stack's full host-side memory
+        audit — cheap enough to run every scheduler iteration under
+        fuzz/faults, every N in production."""
+        tree_pins: Dict[int, int] = {}
+
+        def walk(n, depth):
+            for key, c in n.children.items():
+                assert c.parent is n, f"node {c.page}: broken parent link"
+                assert c.key == key, f"node {c.page}: key mismatch"
+                assert len(key) == self.block_size, \
+                    f"node {c.page}: key spans {len(key)} != block_size"
+                assert c.extent == (depth + 1) * self.block_size, \
+                    f"node {c.page}: extent {c.extent} at depth {depth}"
+                assert c.page in self.pool._ref, \
+                    f"tree node pins freed page {c.page}"
+                tree_pins[c.page] = tree_pins.get(c.page, 0) + 1
+                walk(c, depth + 1)
+        walk(self.root, 0)
+        assert tree_pins == self.pool._pins, \
+            (f"pin-count audit: tree implies {tree_pins}, "
+             f"pool records {self.pool._pins}")
 
     # -- evict (KVBlockPool.evictor protocol) -------------------------------
 

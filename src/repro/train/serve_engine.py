@@ -82,6 +82,7 @@ from repro.distributed import sharding as shd
 from repro.launch import mesh as mesh_lib
 from repro.models import common as model_common
 from repro.models import registry
+from repro.train import faults as faults_lib
 from repro.train import steps as steps_lib
 
 
@@ -142,6 +143,10 @@ class PrefillJob:
     snap_at: int = 0                 # page boundary to snapshot the carry at
                                      # (0: no snapshot; prefix_cache publish)
     snapshot: object = None          # device carry copy taken at ``snap_at``
+    first_token: object = None       # (1,1) device token once the final
+                                     # chunk sampled it (the scheduler holds
+                                     # it here while an ``admit_paged`` that
+                                     # faulted transiently awaits its retry)
 
     @property
     def done(self) -> bool:
@@ -193,7 +198,7 @@ class ServeEngine:
                  prefill_cache_size: int = 8,
                  spec_decode: bool = False, gamma: int = 4,
                  draft_depth: Optional[int] = None, draft_params=None,
-                 prefix_cache: bool = False, kv_dtype=None):
+                 prefix_cache: bool = False, kv_dtype=None, faults=None):
         # Same RNG-layout guard as the train engine: sampled bits must not
         # depend on the mesh the categorical runs under.
         if "JAX_THREEFRY_PARTITIONABLE" not in os.environ:
@@ -251,6 +256,12 @@ class ServeEngine:
         self._pagecopy_built = {}     # (B, NB) -> page-copy step
         self._carry_copy_jit = jax.jit(
             lambda c: jax.tree.map(jnp.copy, c))
+        # Fault plane: named-site injection for robustness tests/benches
+        # (train.faults; the NULL plane when absent — one no-op call per
+        # site, nothing else on the hot path).  Threaded into the pool and
+        # radix cache at continuous_state so one plane sees every site.
+        self.faults = faults_lib.resolve(faults)
+        self._deact_jit = None        # lazy active[row]=False executable
         if spec_decode:
             self._init_spec(draft_depth, draft_params, fsdp=fsdp,
                             moe_fsdp=moe_fsdp)
@@ -683,6 +694,7 @@ class ServeEngine:
         discarded: the target's chunked prefill owns the first token."""
         if not jax.tree.leaves(state.draft_cache):
             return state            # zero-layer draft: nothing to cache
+        self.faults.fire("engine.draft_prefill")
         _, _, _, scatter, _, init_row, _, _ = self._spec_steps(
             state.batch, temperature, state.pool.num_blocks)
         prompt = np.asarray(prompt, np.int32).reshape(1, -1)
@@ -709,6 +721,7 @@ class ServeEngine:
         happened in here (verify ring commit, draft ring restore, and
         index-selects from the per-step recurrent-state checkpoint rings —
         the paged pool needs none)."""
+        self.faults.fire("engine.decode")
         state = self._sync_table(state)
         draft, verify, rollback, _, _, _, _, _ = self._spec_steps(
             state.batch, temperature, state.pool.num_blocks)
@@ -754,7 +767,8 @@ class ServeEngine:
                 else self._resolved_num_blocks(batch)
             _, _, sh, _, init_cache, _ = self._paged_steps(
                 batch, temperature, nb)
-            pool = KVBlockPool(nb, self.block_size, batch, self.max_blocks)
+            pool = KVBlockPool(nb, self.block_size, batch, self.max_blocks,
+                               faults=self.faults)
         else:
             _, _, sh, _, init_cache, _ = self._cont_steps(batch, temperature)
             pool = None
@@ -781,7 +795,10 @@ class ServeEngine:
                 pool=pool,
                 draft_cache=draft_cache,
                 radix=radix)
-        return self._sync_table(state)
+        # Initial upload: state construction, not a serving-time fault
+        # surface — the scheduler's containment starts at its loop, so the
+        # site stays quiet here (tape hit 1 = first SERVED upload).
+        return self._sync_table(state, _fire=False)
 
     def prefill_request(self, state: ContinuousState, prompt,
                         temperature: float = 0.0):
@@ -832,6 +849,7 @@ class ServeEngine:
         self-terminate on eos / per-row limit; inactive rows are no-ops.
         Paged engines read/write K/V through the block table (re-uploaded
         only when the pool changed it — never a steady-state H2D)."""
+        self.faults.fire("engine.decode")
         temp = (self._dev_scalar(temperature, np.float32),
                 ) if temperature > 0 else ()
         eos = self._dev_scalar(eos_id, np.int32)
@@ -855,7 +873,8 @@ class ServeEngine:
 
     # -- paged request lifecycle (chunked prefill through the pool) ---------
 
-    def _sync_table(self, state: ContinuousState) -> ContinuousState:
+    def _sync_table(self, state: ContinuousState,
+                    _fire: bool = True) -> ContinuousState:
         """Re-upload the block table iff the host pool changed it.
 
         The version check is cheap but pessimistic: a speculative
@@ -871,6 +890,11 @@ class ServeEngine:
                 and np.array_equal(tbl_host, state.table_host):
             return dataclasses.replace(state,
                                        table_version=state.pool.version)
+        # Fault site fires before the H2D: an injected upload fault leaves
+        # the device table at its previous version (still self-consistent
+        # with the last dispatched step) and the caller retries.
+        if _fire:
+            self.faults.fire("engine.table_upload")
         tbl = jax.device_put(tbl_host, self._replicated)
         return dataclasses.replace(state, block_table=tbl,
                                    table_version=state.pool.version,
@@ -970,9 +994,16 @@ class ServeEngine:
         row's block table; window/recurrent state through the B=1 carry).
 
         Returns ``(state, first_token or None)`` — the token (device,
-        (1,1)) appears when the final chunk samples it."""
-        C = job.chunks.pop(0)
-        final = not job.chunks
+        (1,1)) appears when the final chunk samples it.
+
+        Transactional under injected faults: the chunk is PEEKED, the job's
+        ``chunks``/``carry``/``ctx`` only move once every fault-prone step
+        (the site below, pool.advance's alloc/evict sites) has passed, and
+        ``pool.advance`` itself resumes incrementally — so a faulted call
+        can simply be retried."""
+        self.faults.fire("engine.prefill_chunk")
+        C = job.chunks[0]
+        final = len(job.chunks) == 1
         job_tokens = job.prompt[job.ctx:job.ctx + C][None, :]
         state.pool.advance(job.row, job.ctx + C)       # alloc-on-advance
         row_table = jax.device_put(
@@ -995,6 +1026,7 @@ class ServeEngine:
                                     job.carry, row_table, ctx)
                 tok = None
                 state = dataclasses.replace(state, cache=cache)
+        job.chunks.pop(0)
         job.carry = carry
         job.ctx += C
         if job.snap_at and job.ctx == job.snap_at and job.snapshot is None:
@@ -1007,19 +1039,17 @@ class ServeEngine:
                     first_token, temperature: float = 0.0) -> ContinuousState:
         """Activate a fully prefilled request in its slot: scatter the B=1
         carry (window rings + recurrent rows — the pages are already in the
-        pool) and arm tokens/cursor/active/limit."""
-        _, admit, _, _, _, _ = self._paged_steps(
-            state.batch, temperature, state.pool.num_blocks)
-        P = len(job.prompt)
-        with self.activation_context():
-            cache, tokens, index, active, limit = admit(
-                state.cache, state.tokens, state.index, state.active,
-                state.limit, job.carry, first_token, np.int32(P),
-                np.int32(P + job.max_new_tokens - 1), np.int32(job.row))
-        state = dataclasses.replace(state, cache=cache, tokens=tokens,
-                                    index=index, active=active, limit=limit)
+        pool) and arm tokens/cursor/active/limit.
+
+        The fault-prone host steps (draft prefill, radix publish) run
+        BEFORE the device scatter flips the row active: a fault here
+        leaves the slot inert and the whole call retryable, never a live
+        device row whose host bookkeeping failed half-way.  The ordering
+        is numerically free — the draft admit and the publish read only
+        the pool pages the prefill chunks already filled."""
         if self.spec_decode:
             state = self._admit_draft(state, job.row, job.prompt, temperature)
+        P = len(job.prompt)
         if state.radix is not None:
             # Publish the prompt's full pages (their every slot now holds
             # prompt K/V and is never written again: decode/verify/rollback
@@ -1030,7 +1060,33 @@ class ServeEngine:
                 state.radix.publish(
                     job.prompt, state.pool.row_pages(job.row)[:n_pub],
                     n_pub, carry=job.snapshot, carry_tokens=job.snap_at)
-        return state
+        _, admit, _, _, _, _ = self._paged_steps(
+            state.batch, temperature, state.pool.num_blocks)
+        with self.activation_context():
+            cache, tokens, index, active, limit = admit(
+                state.cache, state.tokens, state.index, state.active,
+                state.limit, job.carry, first_token, np.int32(P),
+                np.int32(P + job.max_new_tokens - 1), np.int32(job.row))
+        return dataclasses.replace(state, cache=cache, tokens=tokens,
+                                   index=index, active=active, limit=limit)
+
+    def deactivate_row(self, state: ContinuousState,
+                       row: int) -> ContinuousState:
+        """Force one row inactive on device (request failure containment:
+        the scheduler fails a faulted row and keeps the batch serving).
+
+        Only ``active`` changes — a stale decode already dispatched for
+        this row may still land its K/V write, but that write targets
+        pages the pool frees AFTER this call and lands before any new
+        owner's prefill dispatch, the same in-order-execution argument
+        that makes ``KVBlockPool.truncate_row`` rollback safe."""
+        if self._deact_jit is None:
+            self._deact_jit = jax.jit(
+                lambda a, r: a.at[r].set(False),
+                out_shardings=self._replicated)
+        with self.activation_context():
+            active = self._deact_jit(state.active, np.int32(row))
+        return dataclasses.replace(state, active=active)
 
     def free_slot(self, state: ContinuousState, row: int) -> ContinuousState:
         """Free-on-EOS: return the finished row's pages to the pool

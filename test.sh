@@ -24,6 +24,10 @@
 #                                     # tolerance lanes vs the f32 mirror,
 #                                     # COW-with-scales, quantized spec
 #                                     # rollback + prefix parity
+#   bash test.sh --faults-smoke       # fast lane: fault injection + request
+#                                     # lifecycle — tape/storm containment
+#                                     # sweeps, crash-resume byte parity,
+#                                     # deadline/cancel/shed, torn checkpoints
 #
 # Test deps are declared in requirements-test.txt (pytest + hypothesis for
 # the pool property fuzz; a seeded fallback generator runs when hypothesis
@@ -65,6 +69,11 @@ if [[ "${1:-}" == "--quant-smoke" ]]; then
       tests/test_serving_spec.py tests/test_serving_prefix.py -k \
       "quant or Quantized or scales or roundtrip or kv_stats" \
       -m "not slow" "$@"
+fi
+
+if [[ "${1:-}" == "--faults-smoke" ]]; then
+  shift
+  set -- tests/test_serving_faults.py -m "not slow" "$@"
 fi
 
 if ! python -c "import hypothesis" 2>/dev/null; then

@@ -69,7 +69,7 @@ def _assert_solo_parity(cfg, engine, requests, results):
         want = solo.generate(req.prompt[None, :], req.max_new_tokens).tokens
         np.testing.assert_array_equal(res.tokens, want[0])
         assert len(res.new_tokens) == req.max_new_tokens
-        assert res.finish_reason == "length"
+        assert res.finish_reason == "limit"
 
 
 # ---------------------------------------------------------------------------
@@ -132,7 +132,7 @@ def test_eos_frees_slot_and_readmits():
     # own termination point (eos truncation applies to it identically)
     assert results[1].slot == results[0].slot == 0
     np.testing.assert_array_equal(results[1].new_tokens, solo2[:cut2])
-    assert results[1].finish_reason == ("eos" if cut2 < 5 else "length")
+    assert results[1].finish_reason == ("eos" if cut2 < 5 else "limit")
 
 
 def test_immediate_finish_never_occupies_a_slot():

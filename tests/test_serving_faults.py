@@ -1,0 +1,595 @@
+"""Fault-tolerant serving: deterministic injection, lifecycle, crash-resume.
+
+The robustness contract of the serving stack, exercised through the
+``train.faults`` plane (every fragile operation has a named site that
+fires BEFORE state moves):
+
+  * **containment** — a transient fault at ANY site is retried with
+    backoff and, past ``max_retries``, fails exactly the affected
+    request(s); every other request's greedy stream stays byte-identical
+    to running it alone through the contiguous ``ServeEngine.generate``
+    (the fault-free reference: per-row math is independent of
+    co-scheduled rows).  Injected faults never escape
+    ``ContinuousScheduler.run``.
+  * **lifecycle** — every request ends with exactly one ``FinishReason``
+    (eos / limit / deadline / cancelled / failed / shed); deadlines fire
+    queued or mid-decode (partial tokens returned), ``cancel`` lands at
+    the next iteration boundary, ``queue_limit`` sheds overflow with a
+    structured result, and ``summarize`` aggregates throughput/TTFT over
+    COMPLETED requests only.
+  * **crash-resume** — an injected ``CrashError`` (modeling kill -9)
+    escapes uncontained; ``snapshot_every=1`` + :meth:`restore` on a
+    clean engine re-prefills each interrupted request's prompt + emitted
+    tokens through the normal chunked-prefill/radix path, and the merged
+    greedy streams are byte-identical at EVERY iteration boundary a
+    crash can land on.
+  * **audit** — the invariant watchdog (pool refcount conservation +
+    radix pin-count audit) passes every iteration of a clean run and
+    trips on a manufactured pin-count corruption; a torn checkpoint
+    write (``ckpt.write``) leaves the previous checkpoint restorable.
+"""
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.configs.base import ModelConfig
+from repro.train import faults as faults_lib
+from repro.train.faults import SITES, CrashError, FaultError, FaultPlane
+from repro.train.kv_pool import KVBlockPool
+from repro.train.radix_cache import RadixCache
+from repro.train.serve_scheduler import (FINISH_REASONS, ContinuousScheduler,
+                                         Request, load_snapshot,
+                                         save_snapshot, summarize)
+
+CFG = ModelConfig(name="ft-dense", family="dense", num_layers=4, d_model=32,
+                  num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                  max_seq_len=64)
+
+REQ_SHAPES = ((5, 7), (9, 4), (3, 10), (6, 2), (4, 8), (7, 5), (2, 6),
+              (8, 3))
+
+
+def _requests(n=len(REQ_SHAPES)):
+    rng = np.random.default_rng(0)
+    return [Request(prompt=rng.integers(0, CFG.vocab_size,
+                                        (p,)).astype(np.int32),
+                    max_new_tokens=g) for p, g in REQ_SHAPES[:n]]
+
+
+@pytest.fixture(scope="module")
+def params():
+    import jax
+    from repro.models import registry
+    return registry.get_model(CFG).init(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def solo_tokens(params):
+    """uid -> full greedy stream (prompt + gen) from contiguous solo
+    generation — the fault-free reference for every parity assert."""
+    from repro.launch import mesh as mesh_lib
+    from repro.train.serve_engine import ServeEngine
+    solo = ServeEngine(CFG, params, mesh=mesh_lib.single_device_mesh(),
+                       max_len=48)
+    return {i: solo.generate(r.prompt[None, :], r.max_new_tokens).tokens[0]
+            for i, r in enumerate(_requests())}
+
+
+@pytest.fixture(scope="module")
+def plain_eng(params):
+    from repro.train.serve_engine import ServeEngine
+    return ServeEngine(CFG, params, max_len=48, paged=True, block_size=4)
+
+
+@pytest.fixture(scope="module")
+def prefix_eng(params):
+    from repro.train.serve_engine import ServeEngine
+    return ServeEngine(CFG, params, max_len=48, paged=True, block_size=4,
+                       prefix_cache=True)
+
+
+@pytest.fixture(scope="module")
+def spec_eng(params):
+    from repro.train.serve_engine import ServeEngine
+    return ServeEngine(CFG, params, max_len=48, paged=True, block_size=4,
+                       spec_decode=True, gamma=3, draft_depth=2)
+
+
+def _check_result(res, solo):
+    """Structural validity + parity: whatever a request emitted — full or
+    partial — is a byte-exact prefix of its solo stream."""
+    assert res.finish_reason in FINISH_REASONS
+    want = solo[res.uid]
+    got = res.tokens
+    np.testing.assert_array_equal(got, want[:len(got)])
+    if res.completed:
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlane units
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plane_tape_fires_at_exact_hits():
+    plane = FaultPlane.from_tape([("pool.alloc", 2), ("engine.decode", 1,
+                                                      "crash")])
+    plane.fire("pool.alloc")                    # hit 1: clean
+    with pytest.raises(FaultError) as ei:
+        plane.fire("pool.alloc")                # hit 2: fault
+    assert ei.value.site == "pool.alloc" and ei.value.hit == 2
+    plane.fire("pool.alloc")                    # hit 3: clean again
+    with pytest.raises(CrashError):
+        plane.fire("engine.decode")
+    assert plane.counts == {"pool.alloc": 3, "engine.decode": 1}
+    assert plane.fired == [("pool.alloc", 2, "fault"),
+                           ("engine.decode", 1, "crash")]
+
+
+def test_crash_is_not_a_fault():
+    """Containment code catching FaultError must never swallow a crash:
+    the classes are siblings, not parent/child."""
+    assert not issubclass(CrashError, FaultError)
+    assert not issubclass(FaultError, CrashError)
+    for cls in (CrashError, FaultError):
+        assert issubclass(cls, RuntimeError)
+
+
+def test_fault_plane_parse_specs():
+    plane = FaultPlane.parse("pool.alloc:3,sched.iter:7:crash")
+    assert plane._tape == {("pool.alloc", 3): "fault",
+                           ("sched.iter", 7): "crash"}
+    storm = FaultPlane.parse("storm:0.25:9")
+    assert storm._rate == 0.25
+    for bad in ("nope.site:1", "pool.alloc:0", "pool.alloc:1:weird",
+                "pool.alloc", "storm:1.5"):
+        with pytest.raises(ValueError):
+            FaultPlane.parse(bad)
+
+
+def test_seeded_storm_is_deterministic():
+    def fired(seed):
+        plane = FaultPlane.seeded(0.3, seed=seed)
+        out = []
+        for site in SITES * 20:
+            try:
+                plane.fire(site)
+                out.append(0)
+            except FaultError:
+                out.append(1)
+        return out, plane
+    a, plane_a = fired(4)
+    b, _ = fired(4)
+    c, _ = fired(5)
+    assert a == b
+    assert a != c
+    assert sum(a) > 0
+    # sched.iter is excluded from the default storm (crash points are
+    # explicit-tape only)
+    assert all(s != "sched.iter" for s, _, _ in plane_a.fired)
+
+
+def test_null_plane_and_resolve():
+    assert faults_lib.resolve(None) is faults_lib.NULL
+    assert not faults_lib.NULL.enabled
+    faults_lib.NULL.fire("pool.alloc")          # no-op, no counts
+    assert faults_lib.NULL.counts == {}
+    plane = FaultPlane.from_tape([])
+    assert faults_lib.resolve(plane) is plane
+    parsed = faults_lib.resolve("pool.alloc:1")
+    assert isinstance(parsed, FaultPlane)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: fault at every site — retries recover, streams byte-identical
+# ---------------------------------------------------------------------------
+
+PLAIN_SITES = ("pool.alloc", "engine.prefill_chunk", "engine.decode",
+               "engine.table_upload")
+PREFIX_SITES = ("radix.match", "radix.publish", "pool.evict")
+
+
+def _run_with_tape(eng, tape, reqs, **kw):
+    plane = FaultPlane.parse(tape)
+    eng.faults = plane
+    try:
+        sched = ContinuousScheduler(eng, max_batch=2, chunk_len=4,
+                                    retry_backoff_s=1e-4, **kw)
+        results = sched.run(reqs)
+        return results, sched, plane, sched.fault_stats()
+    finally:
+        eng.faults = faults_lib.NULL
+
+
+@pytest.mark.parametrize("site", PLAIN_SITES)
+def test_transient_fault_recovers_byte_identical(site, plain_eng,
+                                                 solo_tokens):
+    """Two injected faults at `site`, retry budget 3: every request still
+    completes with its exact solo stream, and the plane's receipts prove
+    the site actually fired."""
+    results, sched, plane, stats = _run_with_tape(
+        plain_eng, f"{site}:1,{site}:2", _requests(), num_blocks=8,
+        max_retries=3)
+    assert len(results) == len(REQ_SHAPES)
+    for res in results:
+        assert res.completed
+        _check_result(res, solo_tokens)
+    assert plane.counts[site] >= 3          # site exercised past the tape
+    assert len(plane.fired) == 2
+    assert sched.retries >= 2
+    assert stats["fault_sites"][site] == plane.counts[site]
+
+
+@pytest.mark.parametrize("site", PREFIX_SITES)
+def test_transient_fault_recovers_with_prefix_cache(site, prefix_eng,
+                                                    solo_tokens):
+    """Same recovery contract through the radix-cache admission path
+    (match/publish faults, and evict faults under a pool tight enough
+    that pinned pages must be reclaimed)."""
+    results, sched, plane, _ = _run_with_tape(
+        prefix_eng, f"{site}:1,{site}:2", _requests(), num_blocks=8,
+        max_retries=3)
+    for res in results:
+        assert res.completed
+        _check_result(res, solo_tokens)
+    assert plane.counts[site] >= 2
+    assert sched.retries >= 1
+
+
+def test_transient_fault_recovers_draft_prefill(spec_eng, solo_tokens):
+    """Speculative engines add the draft B=1 prefill as a fault surface;
+    recovery keeps the lossless-speculation parity."""
+    results, sched, plane, _ = _run_with_tape(
+        spec_eng, "engine.draft_prefill:1,engine.draft_prefill:2",
+        _requests(), max_retries=3)
+    for res in results:
+        assert res.completed
+        _check_result(res, solo_tokens)
+    assert plane.counts["engine.draft_prefill"] >= 2
+
+
+def test_exhausted_retries_fail_only_affected_rows(plain_eng, solo_tokens):
+    """A hot streak of prefill-chunk faults with a retry budget of 1:
+    some requests fail (structured ``failed`` results, error recorded),
+    the rest complete byte-identical — one bad request never takes down
+    the batch."""
+    tape = ",".join(f"engine.prefill_chunk:{n}" for n in range(1, 9))
+    results, sched, plane, _ = _run_with_tape(
+        plain_eng, tape, _requests(), num_blocks=8, max_retries=1)
+    assert len(results) == len(REQ_SHAPES)
+    failed = [r for r in results if r.finish_reason == "failed"]
+    completed = [r for r in results if r.completed]
+    assert failed and completed
+    for res in failed:
+        assert "engine.prefill_chunk" in res.error
+    for res in results:
+        _check_result(res, solo_tokens)
+    assert sched.failed == len(failed)
+    stats = summarize(results, 1.0)
+    assert stats["finish_reasons"]["failed"] == len(failed)
+    assert stats["completed"] == len(completed)
+    assert sum(stats["finish_reasons"].values()) == len(results)
+
+
+def test_batchwide_decode_fault_storm_fails_live_rows(plain_eng,
+                                                      solo_tokens):
+    """Every decode dispatch faults with no retry budget: every admitted
+    request fails with exactly its prefill token (a byte-exact prefix of
+    the solo stream), the scheduler never raises, and a follow-up clean
+    run on the SAME engine is fully byte-identical — containment leaves
+    no residue."""
+    tape = ",".join(f"engine.decode:{n}" for n in range(1, 40))
+    reqs = _requests(4)
+    results, sched, plane, _ = _run_with_tape(
+        plain_eng, tape, reqs, num_blocks=8, max_retries=0)
+    assert len(results) == 4
+    for res in results:
+        assert res.finish_reason == "failed"
+        assert len(res.new_tokens) >= 1       # prefill token survives
+        _check_result(res, solo_tokens)
+    assert plane.counts["engine.decode"] >= 1
+    clean = ContinuousScheduler(plain_eng, max_batch=2, chunk_len=4,
+                                num_blocks=8).run(reqs)
+    for res in clean:
+        assert res.completed
+        _check_result(res, solo_tokens)
+
+
+def test_fault_storm_never_escapes_the_scheduler(prefix_eng, solo_tokens):
+    """A seeded Bernoulli storm across every site: the run returns a
+    structured result for every request, completed ones byte-identical.
+    The same (workload, seed) storm is deterministic, so this is a fixed
+    regression point, not a flake."""
+    plane = FaultPlane.seeded(0.05, seed=3)
+    prefix_eng.faults = plane
+    try:
+        sched = ContinuousScheduler(prefix_eng, max_batch=2, chunk_len=4,
+                                    num_blocks=8, max_retries=2,
+                                    retry_backoff_s=1e-4, invariant_every=1)
+        results = sched.run(_requests())
+    finally:
+        prefix_eng.faults = faults_lib.NULL
+    assert len(results) == len(REQ_SHAPES)
+    for res in results:
+        _check_result(res, solo_tokens)
+    assert plane.fired                        # the storm actually stormed
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: crash-resume — byte-identical at every iteration boundary
+# ---------------------------------------------------------------------------
+
+
+def _assert_streams_equal(got, want):
+    assert [r.uid for r in got] == [r.uid for r in want]
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.prompt, w.prompt)
+        np.testing.assert_array_equal(g.new_tokens, w.new_tokens)
+        assert g.finish_reason == w.finish_reason
+
+
+def test_crash_resume_parity_at_every_iteration_boundary(prefix_eng,
+                                                         solo_tokens):
+    """Sweep the crash point over EVERY iteration boundary of the
+    workload (sched.iter:k:crash, k = 1, 2, ... until the run outlives
+    the tape): each crash escapes run(), ``last_snapshot`` (taken at
+    every boundary) restores on a clean engine through the normal
+    chunked-prefill/radix path, and the merged streams are byte-identical
+    to the uninterrupted run."""
+    reqs = _requests(3)
+    prefix_eng.faults = faults_lib.NULL
+    clean = ContinuousScheduler(prefix_eng, max_batch=2, chunk_len=4,
+                                num_blocks=12).run(reqs)
+    for res in clean:
+        _check_result(res, solo_tokens)
+    k = 0
+    while True:
+        k += 1
+        prefix_eng.faults = FaultPlane.parse(f"sched.iter:{k}:crash")
+        sched = ContinuousScheduler(prefix_eng, max_batch=2, chunk_len=4,
+                                    num_blocks=12, snapshot_every=1)
+        try:
+            results = sched.run(reqs)
+        except CrashError:
+            snap = sched.last_snapshot
+            assert snap is not None
+            prefix_eng.faults = faults_lib.NULL
+            resumed = ContinuousScheduler(
+                prefix_eng, max_batch=2, chunk_len=4,
+                num_blocks=12).restore(snap)
+            _assert_streams_equal(resumed, clean)
+        else:
+            # the tape's crash point lies past the last boundary — the
+            # sweep covered every iteration of the workload
+            prefix_eng.faults = faults_lib.NULL
+            _assert_streams_equal(results, clean)
+            break
+    assert k > 3                              # the sweep was not vacuous
+
+
+def test_crash_mid_iteration_resumes_from_boundary_snapshot(
+        prefix_eng, solo_tokens, tmp_path):
+    """A crash INSIDE an iteration (mid-decode) loses at most that
+    iteration's work: the boundary snapshot re-derives it and the merged
+    streams still match.  The snapshot round-trips through its JSON
+    file format (the artifact a real deployment would keep beside the
+    checkpoint)."""
+    reqs = _requests(3)
+    prefix_eng.faults = faults_lib.NULL
+    clean = ContinuousScheduler(prefix_eng, max_batch=2, chunk_len=4,
+                                num_blocks=12).run(reqs)
+    prefix_eng.faults = FaultPlane.parse("engine.decode:4:crash")
+    sched = ContinuousScheduler(prefix_eng, max_batch=2, chunk_len=4,
+                                num_blocks=12, snapshot_every=1)
+    with pytest.raises(CrashError):
+        sched.run(reqs)
+    prefix_eng.faults = faults_lib.NULL
+    path = tmp_path / "serve_snapshot.json"
+    save_snapshot(sched.last_snapshot, path)
+    snap = load_snapshot(path)
+    resumed = ContinuousScheduler(prefix_eng, max_batch=2, chunk_len=4,
+                                  num_blocks=12).restore(snap)
+    _assert_streams_equal(resumed, clean)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: deadlines, cancellation, shedding (virtual clock)
+# ---------------------------------------------------------------------------
+
+
+class TickClock:
+    """Deterministic virtual clock: every ``time()`` call advances by
+    ``dt`` (so a busy serving loop makes progress through wall time
+    without real sleeps), ``sleep`` jumps."""
+
+    def __init__(self, dt=0.002):
+        self.t = 0.0
+        self.dt = dt
+
+    def time(self):
+        self.t += self.dt
+        return self.t
+
+    def sleep(self, s):
+        self.t += s
+
+
+def test_queued_request_past_deadline_is_shed_from_the_queue(plain_eng,
+                                                             solo_tokens):
+    """max_batch=1: request B waits behind A and its per-request deadline
+    lapses before a slot frees — it finishes ``deadline`` with zero
+    tokens while A completes untouched."""
+    plain_eng.faults = faults_lib.NULL
+    clock = TickClock()
+    reqs = [Request(prompt=_requests()[0].prompt, max_new_tokens=7),
+            Request(prompt=_requests()[1].prompt, max_new_tokens=4,
+                    deadline_s=0.01)]
+    sched = ContinuousScheduler(plain_eng, max_batch=1, chunk_len=4,
+                                num_blocks=8, time_fn=clock.time,
+                                sleep_fn=clock.sleep)
+    a, b = sched.run(reqs)
+    assert a.completed
+    _check_result(a, solo_tokens)
+    assert b.finish_reason == "deadline"
+    assert len(b.new_tokens) == 0
+    assert b.slot == -1 and math.isnan(b.admitted_s)
+    assert sched.deadline_hits == 1
+
+
+def test_deadline_mid_decode_returns_partial_prefix(plain_eng,
+                                                    solo_tokens):
+    """Scheduler-wide default deadline kills a live request mid-decode:
+    the partial tokens returned are a byte-exact prefix of its solo
+    stream, and its pages/slot are reclaimed (a follow-up request
+    serves)."""
+    plain_eng.faults = faults_lib.NULL
+    clock = TickClock(dt=0.002)
+    prompt = _requests()[0].prompt
+    reqs = [Request(prompt=prompt, max_new_tokens=30)]
+    sched = ContinuousScheduler(plain_eng, max_batch=1, chunk_len=4,
+                                num_blocks=12, time_fn=clock.time,
+                                sleep_fn=clock.sleep, deadline_s=0.05)
+    res, = sched.run(reqs)
+    assert res.finish_reason == "deadline"
+    assert 0 < len(res.new_tokens) < 30
+    # greedy continuations share prefixes: the partial stream matches the
+    # (shorter-budget) solo stream over their common extent
+    want = solo_tokens[0]
+    n = min(len(res.tokens), len(want))
+    assert n > len(prompt)
+    np.testing.assert_array_equal(res.tokens[:n], want[:n])
+    assert sched.deadline_hits == 1
+
+
+def test_cancel_lands_queued_and_live(plain_eng, solo_tokens):
+    """cancel() from on_finish: a live request stops with partial
+    solo-prefix tokens, a queued one with none; unknown uids are
+    ignored."""
+    plain_eng.faults = faults_lib.NULL
+    base = _requests()
+    reqs = [Request(prompt=base[0].prompt[:3], max_new_tokens=2),   # uid 0
+            Request(prompt=base[1].prompt, max_new_tokens=12),      # uid 1
+            Request(prompt=base[2].prompt, max_new_tokens=8),       # uid 2
+            Request(prompt=base[4].prompt, max_new_tokens=8)]       # uid 3
+    sched = ContinuousScheduler(plain_eng, max_batch=2, chunk_len=4,
+                                num_blocks=12)
+
+    def on_finish(res):
+        if res.uid == 0:
+            sched.cancel(1)
+            sched.cancel(3)
+            sched.cancel(99)          # unknown: ignored
+    results = sched.run(reqs, on_finish=on_finish)
+    r0, r1, r2, r3 = results
+    assert r0.completed
+    assert r1.finish_reason == "cancelled"
+    assert len(r1.new_tokens) < 12    # cut mid-decode
+    solo1 = solo_tokens[1]            # same prompt as base[1] (budget 4)
+    n = min(len(r1.tokens), len(solo1))
+    np.testing.assert_array_equal(r1.tokens[:n], solo1[:n])
+    assert r3.finish_reason == "cancelled"
+    assert len(r3.new_tokens) == 0    # never admitted (still queued)
+    assert r2.completed               # untouched neighbour
+    assert sched.cancelled == 2
+
+
+def test_queue_limit_sheds_overflow(plain_eng, solo_tokens):
+    """queue_limit=1, max_batch=1, 4 simultaneous arrivals: one serves,
+    three shed with structured results — and summarize() keeps the shed
+    out of throughput/TTFT."""
+    plain_eng.faults = faults_lib.NULL
+    reqs = [Request(prompt=_requests()[0].prompt, max_new_tokens=5)
+            for _ in range(4)]
+    sched = ContinuousScheduler(plain_eng, max_batch=1, chunk_len=4,
+                                num_blocks=8, queue_limit=1)
+    results = sched.run(reqs)
+    served = [r for r in results if r.completed]
+    shed = [r for r in results if r.finish_reason == "shed"]
+    assert len(served) == 1 and len(shed) == 3
+    assert sched.shed == 3
+    for r in shed:
+        assert "queue_limit" in r.error
+        assert len(r.new_tokens) == 0
+    stats = summarize(results, 1.0)
+    assert stats["finish_reasons"] == {"limit": 1, "shed": 3}
+    assert stats["completed"] == 1
+    assert stats["generated_tokens"] == 5
+    assert stats["generated_tokens_all"] == 5
+    assert stats["goodput"] == stats["tokens_per_s"]
+    # an all-errored workload must not report a perfect latency tail
+    empty = summarize(shed, 1.0)
+    assert math.isnan(empty["ttft_p50_s"])
+    assert empty["completed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Invariant watchdog + radix pin audit
+# ---------------------------------------------------------------------------
+
+
+def test_invariant_watchdog_clean_run(prefix_eng, solo_tokens):
+    """The pool/radix audit passes at EVERY iteration of a clean
+    prefix-cache run (no false positives), with parity intact."""
+    prefix_eng.faults = faults_lib.NULL
+    results = ContinuousScheduler(prefix_eng, max_batch=2, chunk_len=4,
+                                  num_blocks=8,
+                                  invariant_every=1).run(_requests())
+    for res in results:
+        assert res.completed
+        _check_result(res, solo_tokens)
+
+
+def test_radix_pin_audit_trips_on_corruption():
+    """A manufactured pin-count mismatch (the corruption a refcount bug
+    would produce) trips the audit instead of surviving silently."""
+    pool = KVBlockPool(num_blocks=4, block_size=4, batch=2, max_blocks=4)
+    radix = RadixCache(pool)
+    prompt = np.zeros(8, np.int32)
+    pool.admit(0, 8, 2)
+    pool.advance(0, 8)
+    radix.publish(prompt, pool.row_pages(0)[:2], 2)
+    radix.check_invariants()
+    pool.check_invariants()
+    page = pool.row_pages(0)[0]
+    pool._pins[page] += 1             # corrupt: a pin the tree never took
+    with pytest.raises(AssertionError, match="pin-count audit"):
+        radix.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Torn checkpoint writes
+# ---------------------------------------------------------------------------
+
+
+def test_torn_checkpoint_write_keeps_previous_restorable(tmp_path):
+    tree = {"w": np.arange(4, dtype=np.float32)}
+    ckpt.save(str(tmp_path), 1, tree)
+    with pytest.raises(FaultError):
+        ckpt.save(str(tmp_path), 2, {"w": np.ones(4, np.float32)},
+                  faults=FaultPlane.parse("ckpt.write:1"))
+    # the torn write left a .tmp (arrays landed, manifest did not) that
+    # the step index ignores; the previous checkpoint is still latest
+    assert os.path.isdir(tmp_path / "step_000000002.tmp")
+    assert ckpt.all_steps(str(tmp_path)) == [1]
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    restored = ckpt.restore(str(tmp_path), 1, tree)
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+    # a clean retry sweeps the torn directory and lands normally
+    ckpt.save(str(tmp_path), 2, {"w": np.ones(4, np.float32)})
+    assert ckpt.all_steps(str(tmp_path)) == [1, 2]
+    assert not os.path.exists(tmp_path / "step_000000002.tmp")
+
+
+def test_async_checkpointer_surfaces_torn_write_on_wait(tmp_path):
+    tree = {"w": np.zeros(3, np.float32)}
+    ac = ckpt.AsyncCheckpointer()
+    ac.save(str(tmp_path), 1, tree, faults=FaultPlane.parse("ckpt.write:1"))
+    with pytest.raises(FaultError):
+        ac.wait()
+    assert ckpt.all_steps(str(tmp_path)) == []
+    ac.save(str(tmp_path), 1, tree)
+    ac.wait()
+    assert ckpt.all_steps(str(tmp_path)) == [1]

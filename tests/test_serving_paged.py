@@ -24,6 +24,7 @@ from repro.core import quant
 from repro.distributed import sharding as shd
 from repro.launch import mesh as mesh_lib
 from repro.models import registry
+from repro.train.faults import FaultError, FaultPlane
 from repro.train.kv_pool import KVBlockPool, PoolExhausted
 from repro.train.radix_cache import RadixCache
 from repro.train.serve_engine import ServeEngine, pow2_chunks
@@ -305,7 +306,8 @@ def test_pool_fuzz_poisson_arrivals_and_eos():
             _drive_pool(events, int(rng.integers(2, 13)))
 
 
-def _drive_pool_prefix(events, num_blocks, carryless=True, quantized=False):
+def _drive_pool_prefix(events, num_blocks, carryless=True, quantized=False,
+                       faulted=False):
     """Fuzz the refcount/COW/pin surface: a real ``RadixCache`` over the
     pool, prompts drawn from a 2-token alphabet so prefixes collide
     constantly.  Each event ``(row, p, tseed, g, e, spec, deep)``
@@ -332,12 +334,41 @@ def _drive_pool_prefix(events, num_blocks, carryless=True, quantized=False):
     still equals the content fingerprint its shared prefix implies: any
     page-reuse path (free, LRU eviction, truncate_row release, COW) that
     let a physical page reach a new row without its scale state following
-    would trip it."""
+    would trip it.
+
+    ``faulted=True`` arms a seeded Bernoulli fault storm on the pool's
+    ``pool.alloc`` / ``pool.evict`` / ``radix.match`` / ``radix.publish``
+    sites (``train.faults``) and mirrors the scheduler's containment:
+    every faulted op is retried after freeing any half-admission, with
+    the FULL invariant audit (pool refcounts + radix pin counts) run at
+    every injected fault — proving that sites firing before mutation
+    make bounded retry exact and that no fault path leaks a page.  The
+    lane also drops the cold-admission capacity precheck, so the natural
+    ``PoolExhausted`` path is exercised under the same audit."""
     pool = KVBlockPool(num_blocks=num_blocks, block_size=4, batch=6,
-                       max_blocks=8)
+                       max_blocks=8,
+                       faults=FaultPlane.seeded(0.05, seed=1)
+                       if faulted else None)
     radix = RadixCache(pool)
     live = {}
     scales = {}                      # physical page -> modeled scale payload
+
+    def check():
+        pool.check_invariants()
+        radix.check_invariants()
+
+    def retry(fn, row=None):
+        """Scheduler-mirror containment: on an injected fault, undo any
+        half-admission (free the committed row), audit, retry — the
+        sites fire before state moves, so the retry is exact."""
+        for _ in range(16):
+            try:
+                return fn()
+            except FaultError:
+                if row is not None and row in pool._commit:
+                    pool.free(row)
+                check()
+        raise AssertionError("seeded fault storm exceeded the retry budget")
 
     def _fp(prompt, idx):            # content fingerprint of a FULL page
         bs = pool.block_size
@@ -349,7 +380,7 @@ def _drive_pool_prefix(events, num_blocks, carryless=True, quantized=False):
         write there (prompt fingerprints for full prompt pages, a private
         decode marker past them)."""
         before = set(pool.row_pages(row)) if quantized else None
-        pool.advance(row, t)
+        retry(lambda: pool.advance(row, t))
         if quantized:
             for i, pg in enumerate(pool.row_pages(row)):
                 if pg not in before:
@@ -360,7 +391,7 @@ def _drive_pool_prefix(events, num_blocks, carryless=True, quantized=False):
         if row in live:                  # EOS while shared/pinned: pages
             pool.free(row)               # with other references survive
             del live[row]
-            pool.check_invariants()
+            check()
             continue
         prompt = np.random.default_rng(tseed).integers(
             0, 2, size=p).astype(np.int32)
@@ -368,12 +399,16 @@ def _drive_pool_prefix(events, num_blocks, carryless=True, quantized=False):
         if need > min(pool.num_blocks, pool.max_blocks):
             continue
         limit = p + g - 1
-        match = radix.match(prompt, carryless=carryless)
-        while match is not None and not pool.can_admit_prefix(
-                need, match.pages, match.cow_last):
-            # scheduler-mirror: re-clamp an inadmissible hit shallower
-            match = radix.match(prompt, carryless=carryless,
-                                max_pages=len(match.pages) - 1)
+
+        def _match():
+            m = radix.match(prompt, carryless=carryless)
+            while m is not None and not pool.can_admit_prefix(
+                    need, m.pages, m.cow_last):
+                # scheduler-mirror: re-clamp an inadmissible hit shallower
+                m = radix.match(prompt, carryless=carryless,
+                                max_pages=len(m.pages) - 1)
+            return m
+        match = retry(_match)
         if match is not None:
             if not carryless:
                 # carry matches clamp to a snapshot node: the restored
@@ -385,8 +420,11 @@ def _drive_pool_prefix(events, num_blocks, carryless=True, quantized=False):
                 # the payload still matches the shared prefix content
                 for i, pg in enumerate(match.pages):
                     assert scales[pg] == _fp(prompt, i)
-            refs = {pg: pool.ref_count(pg) for pg in match.pages}
-            cow = pool.admit_prefix(row, p, g, match.pages, match.cow_last)
+            def _admit_hit():
+                baseline = {pg: pool.ref_count(pg) for pg in match.pages}
+                return baseline, pool.admit_prefix(row, p, g, match.pages,
+                                                   match.cow_last)
+            refs, cow = retry(_admit_hit, row=row)
             if match.cow_last:
                 src, dst = cow
                 # COW never mutates a shared page: the source keeps its
@@ -397,52 +435,62 @@ def _drive_pool_prefix(events, num_blocks, carryless=True, quantized=False):
                 if quantized:    # the page-copy step clones scales too
                     scales[dst] = scales[src]
             start = match.skip
-        elif pool.can_admit(need):
-            pool.admit(row, p, g)
+        elif faulted or pool.can_admit(need):
+            # faulted lane: no capacity precheck — a clean PoolExhausted
+            # reject (the scheduler's admission-gate path) must leave the
+            # pool exactly as it was
+            try:
+                retry(lambda: pool.admit(row, p, g), row=row)
+            except PoolExhausted:
+                check()
+                continue
             start = 0
         else:
             continue
-        pool.check_invariants()
-        _advance(row, prompt, p, p)      # tail prefill (never raises)
+        check()
+        _advance(row, prompt, p, p)      # tail prefill (never exhausts)
         n_pub = p // pool.block_size
         if n_pub and carryless:
-            radix.publish(prompt, pool.row_pages(row)[:n_pub], n_pub)
+            retry(lambda: radix.publish(
+                prompt, pool.row_pages(row)[:n_pub], n_pub))
         elif n_pub:
             # window/recurrent publishers: carry snapshot at the last page
             # boundary at/below P-1 (what ServeEngine.begin_prefill does)
             snap_at = ((p - 1) // pool.block_size) * pool.block_size
-            radix.publish(prompt, pool.row_pages(row)[:n_pub], n_pub,
-                          carry={"extent": snap_at} if snap_at else None,
-                          carry_tokens=snap_at)
-        pool.check_invariants()
+            retry(lambda: radix.publish(
+                prompt, pool.row_pages(row)[:n_pub], n_pub,
+                carry={"extent": snap_at} if snap_at else None,
+                carry_tokens=snap_at))
+        check()
         tokens = min(p + max(0, g - 1 - e), limit)
         for t in range(p + 1, tokens + 1):
             if spec and t % spec == 0:   # speculate ahead, roll back
                 _advance(row, prompt, p, min(t + spec, limit))
                 pool.truncate_row(row, t)
-                pool.check_invariants()
+                check()
             _advance(row, prompt, p, t)
         if deep and start:               # rollback BELOW the shared
             pool.truncate_row(row, max(0, start - 2))   # boundary: legal at
-            pool.check_invariants()      # pool level (refs drop, pinned
+            check()                      # pool level (refs drop, pinned
             _advance(row, prompt, p, tokens)   # pages survive; fresh pages
             # back the re-advance (rewritten, so their scales rewrite too)
         live[row] = True
-        pool.check_invariants()
+        check()
     for row in live:
         pool.free(row)
-    pool.check_invariants()
+    check()
     while radix.evict_one():             # drain the tree, LRU-leaf-first
-        pool.check_invariants()
+        check()
     assert radix.num_nodes == 0          # all pins released...
     assert pool.free_blocks == pool.num_blocks   # ...and all pages freed
     assert pool.committed_blocks == 0
 
 
-@pytest.mark.parametrize("carryless,quantized",
-                         [(True, False), (False, False), (True, True)],
-                         ids=["dense", "carry", "quantized"])
-def test_pool_fuzz_prefix_share_cow_evict(carryless, quantized):
+@pytest.mark.parametrize("carryless,quantized,faulted",
+                         [(True, False, False), (False, False, False),
+                          (True, True, False), (True, False, True)],
+                         ids=["dense", "carry", "quantized", "faulted"])
+def test_pool_fuzz_prefix_share_cow_evict(carryless, quantized, faulted):
     """Random share/COW/publish/evict churn — with spec truncate_row
     rollbacks interleaved — against the refcounted pool + radix tree
     contract (see ``_drive_pool_prefix``); the ``carry`` lane drives the
@@ -464,7 +512,7 @@ def test_pool_fuzz_prefix_share_cow_evict(carryless, quantized):
                st.integers(2, 12))
         def run(events, num_blocks):
             _drive_pool_prefix(events, num_blocks, carryless=carryless,
-                               quantized=quantized)
+                               quantized=quantized, faulted=faulted)
 
         run()
     else:
@@ -476,7 +524,8 @@ def test_pool_fuzz_prefix_share_cow_evict(carryless, quantized):
                        bool(rng.integers(0, 2)))
                       for _ in range(int(rng.integers(1, 61)))]
             _drive_pool_prefix(events, int(rng.integers(2, 13)),
-                               carryless=carryless, quantized=quantized)
+                               carryless=carryless, quantized=quantized,
+                               faulted=faulted)
 
 
 # ---------------------------------------------------------------------------

@@ -177,7 +177,7 @@ def test_acceptance_rate_exact_on_budget_boundary():
     results = sched.run(reqs)
     _assert_solo_parity(cfg2, p2, reqs, results)
     for res in results:
-        assert res.finish_reason == "length"     # budget, never EOS
+        assert res.finish_reason == "limit"     # budget, never EOS
     stats = sched.spec_stats()
     assert stats["spec_rounds"] > 0
     assert stats["spec_proposed"] > 0
