@@ -1302,6 +1302,164 @@ def bench_serve_faults(fast=False):
               "— run `--only serve_faults` for the mesh layout", flush=True)
 
 
+def bench_train_faults(fast=False):
+    """Train-side robustness cost, three measured phases on the tiny dense
+    model (mirrors ``bench_serve_faults`` for the training fault plane):
+
+    1. ``overhead`` — per-step cost of arming the numerical sentinels
+       (isfinite/grad-norm/update-norm in the jitted step, skip ladder) plus
+       the expansion-guard host checks, on a clean run.  Measured as the
+       median of consecutive batch-fetch deltas (one fetch per step), so
+       compile and warm-up are excluded entirely.  Target: <2%.
+    2. ``recovery`` — a ``train.iter`` crash tape mid-run (after the
+       expansion boundary) under periodic checkpoints, then a resume from
+       the same directory.  Reported: steps replayed (crash point minus the
+       last checkpoint label), resume wall time, and whether the stitched
+       loss curve is byte-identical to an uninterrupted run.
+    3. ``storm`` — a 5% seeded Bernoulli fault storm over the non-iteration
+       train sites with bounded retries.  Reported: steps/s vs clean,
+       retries, and loss-curve byte parity (retry-before-mutate means the
+       storm must not perturb the trajectory).
+
+    Writes ``BENCH_train_faults.json`` (no mesh needed — single device)."""
+    import numpy as np
+    from repro.checkpoint import checkpointer as ckpt
+    from repro.configs.base import (ExpansionConfig, ModelConfig,
+                                    OptimizerConfig, ScheduleConfig,
+                                    TrainConfig)
+    from repro.data.synthetic import DataConfig, SyntheticLM
+    from repro.train import loop
+    from repro.train.faults import CrashError, FaultPlane
+
+    CFG = ModelConfig(name="bench-tfaults", family="dense", num_layers=4,
+                      d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                      vocab_size=256, max_seq_len=64)
+    SEQ, BATCH = 32, 8
+
+    class TimedData(SyntheticLM):
+        """Timestamps every batch fetch — one per train step — so
+        consecutive-fetch deltas measure steady-state per-step wall time
+        with compile excluded (the first delta absorbs it; median kills
+        it and any stragglers)."""
+
+        def __init__(self, dcfg):
+            super().__init__(dcfg)
+            self.t = []
+
+        def batch(self, step, shard=0, num_shards=1):
+            self.t.append(time.perf_counter())
+            return super().batch(step, shard, num_shards)
+
+    def run(total, *, expand=False, ckpt_every=10**9, ckpt_dir=None,
+            data=None, **kw):
+        expansions = ()
+        src = CFG.num_layers
+        if expand:
+            src = 2
+            expansions = (ExpansionConfig(at_frac=0.5, target_layers=4,
+                                          init="copying_stack"),)
+        tcfg = TrainConfig(
+            total_steps=total, seq_len=SEQ, global_batch=BATCH,
+            source_layers=src, expansions=expansions,
+            optimizer=OptimizerConfig(name="adamw", learning_rate=1e-3),
+            schedule=ScheduleConfig(name="constant"),
+            eval_every=10**9, eval_batches=1, log_every=1,
+            checkpoint_every=ckpt_every, seed=0)
+        dcfg = DataConfig(vocab_size=CFG.vocab_size, seq_len=SEQ,
+                          global_batch=BATCH, seed=0)
+        return loop.train(CFG, tcfg, data=data or SyntheticLM(dcfg),
+                          checkpoint_dir=ckpt_dir, log_fn=lambda *a: None,
+                          **kw)
+
+    # -- 1. sentinel overhead (median steady-state step time) ---------------
+    N_STEPS, WARM = (60 if fast else 200), 10
+    REPS = 2 if fast else 3
+    variants = {"plain": {},
+                "sentinel": dict(nan_policy="skip", expansion_guard=True)}
+    per_step = {}
+    for name, kw in variants.items():
+        best = float("inf")
+        for _ in range(REPS):
+            dcfg = DataConfig(vocab_size=CFG.vocab_size, seq_len=SEQ,
+                              global_batch=BATCH, seed=0)
+            td = TimedData(dcfg)
+            run(N_STEPS, data=td, **kw)
+            best = min(best, float(np.median(np.diff(td.t[WARM:]))))
+        per_step[name] = best
+    overhead_pct = (per_step["sentinel"] / per_step["plain"] - 1.0) * 100.0
+
+    # -- 2. crash recovery: steps-to-recover + resume parity ----------------
+    import tempfile
+    T, CKPT_EVERY, CRASH_AFTER = 30, 10, 25   # tau=15; latest ckpt 20
+    clean = run(T, expand=True)
+    with tempfile.TemporaryDirectory() as d:
+        try:
+            run(T, expand=True, ckpt_every=CKPT_EVERY, ckpt_dir=d,
+                faults=f"train.iter:{CRASH_AFTER + 1}:crash",
+                async_ckpt=False)
+            raise RuntimeError("crash tape never fired")
+        except CrashError:
+            pass
+        latest = ckpt.latest_step(d)
+        t0 = time.perf_counter()
+        resumed = run(T, expand=True, ckpt_every=CKPT_EVERY, ckpt_dir=d,
+                      async_ckpt=False)
+        resume_wall = time.perf_counter() - t0
+    steps_replayed = CRASH_AFTER - latest
+    resume_ok = bool(np.array_equal(resumed.history["loss"],
+                                    clean.history["loss"]))
+
+    # -- 3. 5% fault storm: steps/s effect under retry containment ----------
+    STORM_RATE, STORM_SEED, RETRIES = 0.05, 7, 5
+    t0 = time.perf_counter()
+    base = run(T, expand=True)
+    clean_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    storm = run(T, expand=True, max_retries=RETRIES, retry_backoff_s=1e-4,
+                faults=FaultPlane.seeded(STORM_RATE, seed=STORM_SEED))
+    storm_wall = time.perf_counter() - t0
+    fs = storm.fault_stats
+    storm_ok = bool(np.array_equal(storm.history["loss"],
+                                   base.history["loss"]))
+    clean_sps = T / clean_wall
+    storm_sps = T / storm_wall
+
+    out = {"arch": CFG.name, "steps": {"overhead": N_STEPS, "recovery": T},
+           "overhead": {"plain_us_per_step": per_step["plain"] * 1e6,
+                        "sentinel_us_per_step": per_step["sentinel"] * 1e6,
+                        "overhead_pct": overhead_pct, "target_pct": 2.0,
+                        "note": "cost is two O(P) norm reductions in the "
+                                "jitted step; the d_model=64 CPU bench is "
+                                "bandwidth-dominated, so this is the upper "
+                                "bound — it amortizes as compute grows"},
+           "recovery": {"crash_after_steps": CRASH_AFTER,
+                        "checkpoint_every": CKPT_EVERY,
+                        "latest_checkpoint": latest,
+                        "steps_replayed": steps_replayed,
+                        "resume_wall_s": resume_wall,
+                        "resume_byte_identical": resume_ok},
+           "storm": {"rate": STORM_RATE, "seed": STORM_SEED,
+                     "clean_steps_per_s": clean_sps,
+                     "storm_steps_per_s": storm_sps,
+                     "ratio": storm_sps / clean_sps,
+                     "retries": fs["retries"],
+                     "site_hits": fs["fault_counts"],
+                     "loss_byte_identical": storm_ok}}
+    _row("train_faults/overhead", per_step["sentinel"] * 1e6,
+         f"plain_us={per_step['plain'] * 1e6:.0f};"
+         f"overhead_pct={overhead_pct:.2f};target_pct=2.00")
+    _row("train_faults/recovery", resume_wall * 1e6,
+         f"crash_after={CRASH_AFTER};latest_ckpt={latest};"
+         f"steps_replayed={steps_replayed};resume_parity={resume_ok}")
+    _row("train_faults/storm", storm_wall * 1e6,
+         f"rate={STORM_RATE};clean_sps={clean_sps:.1f};"
+         f"storm_sps={storm_sps:.1f};ratio={storm_sps / clean_sps:.2f};"
+         f"retries={fs['retries']};parity={storm_ok}")
+    with open("BENCH_train_faults.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("# wrote BENCH_train_faults.json", flush=True)
+
+
 BENCHES = {
     "expansion_init": bench_expansion_init,
     "copying_variants": bench_copying_variants,
@@ -1312,6 +1470,7 @@ BENCHES = {
     "mup_transfer": bench_mup_transfer,
     "theory": bench_theory,
     "kernels": bench_kernels,
+    "train_faults": bench_train_faults,
     # serving benches: mutate the jax environment when they run first
     # (`--only serve` / `--only serve_continuous` / `--only serve_paged`
     #  / `--only serve_spec` / `--only serve_prefix` / `--only serve_quant`

@@ -109,9 +109,16 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore(directory: str, step: int, like: Any, shardings: Any = None) -> Any:
+def restore(directory: str, step: int, like: Any, shardings: Any = None,
+            faults=None) -> Any:
     """Restore into the structure of `like`; if `shardings` is given the
-    leaves are device_put with those shardings (elastic re-shard)."""
+    leaves are device_put with those shardings (elastic re-shard).
+
+    ``faults`` arms the ``ckpt.restore`` site before any file is touched —
+    a transient read failure (flaky remote store at resume/rollback time)
+    leaves nothing partially loaded, so callers retry safely."""
+    from repro.train import faults as faults_lib
+    faults_lib.resolve(faults).fire("ckpt.restore")
     path = os.path.join(directory, f"step_{step:09d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)

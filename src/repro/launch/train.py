@@ -13,6 +13,19 @@ from __future__ import annotations
 import argparse
 import json
 
+FAULT_GRAMMAR = """\
+fault spec grammar (shared with launch/serve.py — one FaultPlane.parse):
+  site:nth[:kind],...   the nth (1-based) hit of a named site raises; kind
+                        is 'fault' (transient, retried/contained) or 'crash'
+                        (process death — resume from --ckpt-dir to recover)
+  storm:rate[:seed]     seeded Bernoulli fault storm over all non-iteration
+                        sites
+train-side sites: train.batch train.step train.eval train.expand train.iter
+                  ckpt.write ckpt.restore   (train.iter = scheduled-crash
+                  point, e.g. train.iter:40:crash)
+example: --faults ckpt.write:1,train.iter:120:crash --nan-policy skip
+"""
+
 from repro import configs as cfglib
 from repro.configs.base import (ExpansionConfig, OptimizerConfig,
                                 ScheduleConfig, TrainConfig)
@@ -21,7 +34,9 @@ from repro.train import loop
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=FAULT_GRAMMAR,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", default="gpt2-12l")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config for --arch")
@@ -58,6 +73,25 @@ def main(argv=None):
     ap.add_argument("--grad-accum", type=int, default=1,
                     help="microbatches per step (gradient accumulation); "
                     "must divide --batch")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="deterministic fault injection (see grammar below)")
+    ap.add_argument("--nan-policy", default="off",
+                    choices=["off", "warn", "skip", "rollback"],
+                    help="bad-step sentinel ladder: warn logs, skip discards "
+                    "the update on device, rollback also restores the "
+                    "latest checkpoint after repeated bad steps")
+    ap.add_argument("--nan-inject", default=None, metavar="SPEC",
+                    help="numerical fault injection 'kind:step[@attempt],...'"
+                    " with kind nan|spike (testing the sentinels)")
+    ap.add_argument("--expansion-guard", action="store_true",
+                    help="post-expansion divergence watchdog: auto-rollback "
+                    "to the boundary checkpoint and retry with a "
+                    "function-preserving init / deferred tau")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="max retries per transient fault site")
+    ap.add_argument("--hang-deadline-s", type=float, default=None,
+                    help="fail a train step as a train.step fault if it "
+                    "exceeds this wall time instead of stalling")
     args = ap.parse_args(argv)
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
@@ -83,9 +117,23 @@ def main(argv=None):
                else cfglib.default_remat(args.arch) if args.remat == "auto"
                else args.remat))
     mesh = mesh_lib.make_train_mesh(args.mesh)
-    res = loop.train(cfg, tcfg, checkpoint_dir=args.ckpt_dir, mesh=mesh)
+    res = loop.train(cfg, tcfg, checkpoint_dir=args.ckpt_dir, mesh=mesh,
+                     faults=args.faults, nan_policy=args.nan_policy,
+                     nan_inject=args.nan_inject,
+                     expansion_guard=args.expansion_guard,
+                     max_retries=args.retries,
+                     hang_deadline_s=args.hang_deadline_s)
     print(f"final loss: {res.history['loss'][-1]:.4f} "
           f"(layers {res.final_layers})")
+    fs = res.fault_stats
+    if (args.faults or args.nan_policy != "off" or args.nan_inject
+            or args.expansion_guard or args.hang_deadline_s is not None):
+        print(f"faults: retries={fs['retries']} "
+              f"ckpt_failures={fs['ckpt_failures']} "
+              f"skipped={fs['skipped_steps']} "
+              f"nan_rollbacks={fs['nan_rollbacks']} "
+              f"guard_events={fs['guard_events']} hangs={fs['hangs']} "
+              f"site_hits={fs['fault_counts']} fired={fs['fired']}")
     if args.history_out:
         with open(args.history_out, "w") as f:
             json.dump(res.history, f)

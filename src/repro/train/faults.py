@@ -1,53 +1,86 @@
-"""Deterministic fault injection for the serving stack.
+"""Deterministic fault injection for the train **and** serve stacks.
 
-A production serving engine dies in ways a clean benchmark never shows:
-an allocation fails mid-iteration, a table upload is interrupted, a
-checkpoint write is torn by preemption.  The robustness contract of the
-scheduler ("one failing request never takes down the batch", "a crash
-loses no admitted request") is only testable if those faults can be
-*produced on demand, deterministically* — so this module gives every
-fragile operation in the stack a named **fault site** and routes it
-through one ``FaultPlane``:
+A production system dies in ways a clean benchmark never shows: an
+allocation fails mid-iteration, a table upload is interrupted, a train
+step produces a NaN, a checkpoint write is torn by preemption, the
+process is killed mid-expansion.  The robustness contracts ("one failing
+request never takes down the batch", "a crash loses no admitted
+request", "a preempted training run resumes byte-identically") are only
+testable if those faults can be *produced on demand, deterministically*
+— so this module gives every fragile operation in both stacks a named
+**fault site** and routes it through one ``FaultPlane``:
 
-  * ``pool.alloc``           KVBlockPool page allocation (free-list pop)
-  * ``pool.evict``           KVBlockPool eviction callback into the radix tree
-  * ``radix.publish``        RadixCache prefix publish after prefill
-  * ``radix.match``          RadixCache prefix lookup at admission
-  * ``engine.prefill_chunk`` ServeEngine chunked-prefill dispatch
-  * ``engine.decode``        ServeEngine masked-decode / speculation dispatch
-  * ``engine.table_upload``  ServeEngine block-table H2D re-upload
-  * ``engine.draft_prefill`` ServeEngine speculative draft B=1 prefill
-  * ``ckpt.write``           checkpoint.checkpointer torn write (arrays
-                             written, manifest not — the preemption window)
-  * ``sched.iter``           ContinuousScheduler iteration boundary (used
-                             for scheduled crashes, see below)
+  ============================ ============================================
+  serving sites
+  ============================ ============================================
+  ``pool.alloc``               KVBlockPool page allocation (free-list pop)
+  ``pool.evict``               KVBlockPool eviction callback into the radix
+  ``radix.publish``            RadixCache prefix publish after prefill
+  ``radix.match``              RadixCache prefix lookup at admission
+  ``engine.prefill_chunk``     ServeEngine chunked-prefill dispatch
+  ``engine.decode``            ServeEngine masked-decode / spec dispatch
+  ``engine.table_upload``      ServeEngine block-table H2D re-upload
+  ``engine.draft_prefill``     ServeEngine speculative draft B=1 prefill
+  ``sched.iter``               ContinuousScheduler iteration boundary
+                               (scheduled crash point, see below)
+  ============================ ============================================
+  training sites (``ProgressiveTrainer``)
+  ============================ ============================================
+  ``train.batch``              host batch generation + device placement
+  ``train.step``               train-step dispatch (params/opt donated
+                               only after the site passes, so retry-safe);
+                               also fired by ``StragglerMonitor`` when a
+                               step exceeds its hang deadline
+  ``train.eval``               held-out eval sweep dispatch
+  ``train.expand``             depth expansion at τ (after the boundary
+                               checkpoint, before params mutate)
+  ``train.iter``               training-loop iteration boundary
+                               (scheduled crash point)
+  ============================ ============================================
+  shared checkpointer sites
+  ============================ ============================================
+  ``ckpt.write``               torn write (arrays written, manifest not —
+                               the preemption window)
+  ``ckpt.restore``             checkpoint read at resume/rollback
+  ============================ ============================================
 
 Sites **fire before the operation mutates any state**, so an injected
-fault leaves the pool/tree/engine exactly as it was and a bounded retry
-is always safe.  Two failure kinds are modeled:
+fault leaves the pool/tree/engine/params exactly as they were and a
+bounded retry is always safe.  Two failure kinds are modeled:
 
   * ``fault`` — raises :class:`FaultError`, a *transient* error the
-    scheduler is expected to contain (retry with backoff, or fail the one
-    affected request and keep serving the rest of the batch);
-  * ``crash`` — raises :class:`CrashError`, which the scheduler must NOT
-    catch: it models the process dying (SIGKILL, machine loss).  Recovery
-    is ``ContinuousScheduler.snapshot()`` / ``restore`` — re-prefilling
-    each interrupted request's prompt + emitted tokens (byte-identical
-    resume; K/V depends only on the token prefix).
+    scheduler/trainer is expected to contain (retry with backoff; the
+    scheduler then fails only the affected request, the trainer keeps
+    training through failed checkpoint writes);
+  * ``crash`` — raises :class:`CrashError`, which containment must NOT
+    catch: it models the process dying (SIGKILL, preemption).  Recovery
+    is ``ContinuousScheduler.snapshot()``/``restore`` on the serve side
+    and checkpoint resume on the train side — a restarted
+    ``ProgressiveTrainer`` replays from the last completed checkpoint to
+    a byte-identical stream of losses and params (the data stream is
+    step-indexed, so the replay is exact).
 
 Two drivers, both deterministic:
 
   * an explicit **tape** — ``[(site, nth, kind), ...]``: the ``nth`` time
     (1-based) ``site`` fires, raise.  ``FaultPlane.parse`` accepts the
     compact CLI form ``"site:nth[:kind]"`` joined by commas, e.g.
-    ``--faults pool.alloc:3,engine.decode:5,sched.iter:40:crash``;
+    ``--faults pool.alloc:3,train.iter:40:crash`` — the same grammar on
+    ``launch/serve.py --faults`` and ``launch/train.py --faults``;
   * a seeded **schedule** — ``FaultPlane.seeded(rate, seed)`` draws one
     reproducible Bernoulli per site hit (a "fault storm" for benchmarks
-    and fuzz).
+    and fuzz).  The iteration-boundary sites (``sched.iter``,
+    ``train.iter``) are excluded by default — crash points only make
+    sense as explicit tape entries.
+
+Numerical faults (a NaN loss, an exploding gradient) are not exceptions
+and do not go through ``fire``; they are injected *into the train step's
+math* via :func:`parse_nan_inject` and detected by the step's sentinel
+metrics (see ``train.steps.make_train_step``).
 
 When disabled (the default ``NULL`` plane) every site compiles down to a
-single no-op method call — the serving hot path pays one attribute lookup
-and nothing else, and no RNG state exists to perturb determinism.
+single no-op method call — the hot paths pay one attribute lookup and
+nothing else, and no RNG state exists to perturb determinism.
 """
 from __future__ import annotations
 
@@ -64,9 +97,20 @@ SITES = (
     "engine.decode",
     "engine.table_upload",
     "engine.draft_prefill",
+    "train.batch",
+    "train.step",
+    "train.eval",
+    "train.expand",
+    "train.iter",
     "ckpt.write",
+    "ckpt.restore",
     "sched.iter",
 )
+
+# Iteration-boundary sites: scheduled-crash points, excluded from seeded
+# storms by default (a storm faulting the loop boundary itself models
+# nothing a retry could contain).
+ITER_SITES = frozenset({"sched.iter", "train.iter"})
 
 
 class _Injected(RuntimeError):
@@ -92,6 +136,24 @@ class CrashError(_Injected):
     swallow it: it unwinds the serving loop like a kill -9 would, and the
     recovery path is snapshot/restore, not retry."""
     kind = "crash"
+
+
+class HangError(FaultError):
+    """A step exceeded its hang deadline (``StragglerMonitor``).  Raised
+    as a ``train.step`` fault so the trainer's containment/telemetry see
+    a stuck collective instead of the loop stalling forever.  Unlike a
+    pre-dispatch fault the hung step HAS run (buffers donated), so the
+    trainer records it and moves on rather than retrying."""
+    kind = "hang"
+
+    def __init__(self, site: str, hit: int, dt: float, deadline_s: float):
+        RuntimeError.__init__(
+            self, f"step hang at {site}: {dt:.3f}s exceeded the "
+                  f"{deadline_s:.3f}s deadline (hit {hit})")
+        self.site = site
+        self.hit = hit
+        self.dt = dt
+        self.deadline_s = deadline_s
 
 
 class FaultPlane:
@@ -134,15 +196,15 @@ class FaultPlane:
                sites: Optional[Sequence[str]] = None) -> "FaultPlane":
         """Bernoulli(rate) per site hit from one seeded stream — the same
         (workload, seed) always faults at the same hits.  ``sites``
-        restricts the storm (default: every site except ``sched.iter``,
-        which only makes sense as an explicit crash point)."""
+        restricts the storm (default: every site except the
+        iteration-boundary crash points ``sched.iter``/``train.iter``)."""
         if not 0.0 <= rate <= 1.0:
             raise ValueError(f"fault rate {rate} outside [0, 1]")
         plane = cls()
         plane._rate = rate
         plane._rng = np.random.default_rng(seed)
         plane._sites = frozenset(sites if sites is not None
-                                 else set(SITES) - {"sched.iter"})
+                                 else set(SITES) - ITER_SITES)
         for s in plane._sites:
             if s not in SITES:
                 raise ValueError(f"unknown fault site {s!r}")
@@ -213,3 +275,48 @@ def resolve(faults) -> object:
     if isinstance(faults, str):
         return FaultPlane.parse(faults)
     return faults
+
+
+# -- numerical fault injection (train-step sentinels) ------------------------
+
+NAN_INJECT_KINDS = ("nan", "spike")
+
+
+def parse_nan_inject(spec) -> Tuple[Tuple[str, int, Optional[int]], ...]:
+    """Parse a numerical-injection spec for the train step's sentinels.
+
+    Grammar: ``"kind:step[@attempt],..."`` where ``kind`` is ``nan``
+    (loss and grads become NaN at that step) or ``spike`` (grads are
+    scaled by 1e4 — a divergence, not an invalid value).  The optional
+    ``@attempt`` scopes the injection to one expansion-guard attempt, so
+    a post-expansion divergence can be injected on attempt 0 and absent
+    after the guard rolls back and retries.  Returns
+    ``((kind, step, attempt_or_None), ...)``; accepts ``None``/empty and
+    already-parsed tuples.
+    """
+    if not spec:
+        return ()
+    if not isinstance(spec, str):
+        return tuple((k, int(s), None if a is None else int(a))
+                     for (k, s, a) in spec)
+    out = []
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        head, _, attempt = item.partition("@")
+        kind, sep, step = head.partition(":")
+        if kind not in NAN_INJECT_KINDS or not sep:
+            raise ValueError(f"bad nan-inject spec {item!r} "
+                             "(want kind:step[@attempt], kind in "
+                             f"{'|'.join(NAN_INJECT_KINDS)})")
+        out.append((kind, int(step), int(attempt) if attempt else None))
+    return tuple(out)
+
+
+def active_inject(entries, attempt: int) -> Dict[int, str]:
+    """Filter parsed injections down to those live for ``attempt``
+    (entries with no @attempt scope are live for every attempt); returns
+    ``{step: kind}`` for baking into the jitted train step."""
+    return {int(s): k for (k, s, a) in parse_nan_inject(entries)
+            if a is None or a == attempt}

@@ -25,11 +25,13 @@ def train(model_cfg: ModelConfig, tcfg: TrainConfig,
           eval_batches=None,
           dtype=jnp.float32,
           log_fn: Callable = print,
-          mesh=None) -> TrainResult:
+          mesh=None, **engine_kwargs) -> TrainResult:
     """Run (possibly progressive) training.  `model_cfg.num_layers` is the
     *target* depth; training starts at `tcfg.source_layers` and follows
-    `tcfg.expansions`.  `mesh=None` runs on one device."""
+    `tcfg.expansions`.  `mesh=None` runs on one device.  Extra keyword
+    arguments (``faults``, ``nan_policy``, ``expansion_guard``, ...) pass
+    through to ``ProgressiveTrainer``."""
     return ProgressiveTrainer(model_cfg, tcfg, mesh=mesh,
                               checkpoint_dir=checkpoint_dir, data=data,
                               eval_batches=eval_batches, dtype=dtype,
-                              log_fn=log_fn).run()
+                              log_fn=log_fn, **engine_kwargs).run()

@@ -61,10 +61,21 @@ def _microbatch(batch, grad_accum: int, shardings: Optional[StepShardings]):
     return mb
 
 
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    if not leaves:
+        return jnp.float32(0.0)
+    return jnp.sqrt(sum(leaves))
+
+
 def make_train_step(cfg: ModelConfig, opt: Optimizer, schedule: Callable,
                     remat: bool = False, donate: bool = True,
                     grad_accum: int = 1,
-                    shardings: Optional[StepShardings] = None) -> Callable:
+                    shardings: Optional[StepShardings] = None,
+                    sentinels: bool = False, nan_policy: str = "warn",
+                    spike_factor: float = 10.0,
+                    inject: Optional[dict] = None) -> Callable:
     """(params, opt_state, batch, step) -> (params, opt_state, metrics).
 
     The schedule is evaluated *inside* the step from the global step counter,
@@ -74,14 +85,38 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, schedule: Callable,
     With ``grad_accum > 1`` the global batch is split into `grad_accum`
     microbatches scanned sequentially with gradient averaging — identical
     update to the full-batch step, but peak activation memory (and the
-    required per-device batch) shrinks by the accumulation factor."""
+    required per-device batch) shrinks by the accumulation factor.
+
+    With ``sentinels=True`` the step becomes
+    ``(params, opt_state, batch, step, gnorm_ema) -> (..., metrics)`` and
+    the metrics gain device-computed health scalars — no extra host sync,
+    the engine reads them from the metrics dict it already fetches:
+
+      * ``grad_norm`` / ``update_norm``  global L2 norms of the gradient
+        and the applied parameter delta;
+      * ``bad``  1.0 when the step is unhealthy: non-finite loss or grad
+        norm, or ``grad_norm > spike_factor * gnorm_ema`` (the EMA operand
+        is threaded by the engine; <= 0 means uninitialized, disabling the
+        spike test for the first step);
+      * ``gnorm_ema``  the updated EMA (bad steps don't pollute it).
+
+    Under ``nan_policy`` 'skip' or 'rollback' a bad step's update is
+    discarded ON DEVICE — params *and* optimizer state come back as their
+    pre-step values via a scalar-predicate select, so the trajectory after
+    a skipped step is exactly that of a run which never produced the
+    batch's update ('warn' applies the poisoned update and only reports).
+
+    ``inject`` ({step: 'nan'|'spike'}) bakes deterministic numerical
+    faults into the compiled step for tests: at the named global step the
+    loss/grads are multiplied by NaN, or the grads scaled by 1e4.  The
+    comparison is against the traced step operand, so injection costs one
+    fused select and recompiles nothing across steps."""
     api = registry.get_model(cfg)
 
     def loss_fn(p, b):
         return api.loss(p, cfg, b, remat=remat)
 
-    def step_fn(params, opt_state, batch, step):
-        lr = schedule(step)
+    def forward(params, batch):
         if grad_accum <= 1:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
@@ -105,19 +140,66 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, schedule: Callable,
             grads = jax.tree.map(lambda g: g * inv, grads)
             loss = loss * inv
             metrics = jax.tree.map(lambda m: m * inv, metrics)
+        return loss, metrics, grads
+
+    def step_fn(params, opt_state, batch, step):
+        lr = schedule(step)
+        loss, metrics, grads = forward(params, batch)
         params, opt_state = opt.update(grads, opt_state, params, lr)
         out = {"loss": loss, "lr": lr, **metrics}
         return params, opt_state, out
 
+    def sentinel_fn(params, opt_state, batch, step, gnorm_ema):
+        lr = schedule(step)
+        loss, metrics, grads = forward(params, batch)
+        if inject:
+            f_loss = jnp.float32(1.0)
+            f_grad = jnp.float32(1.0)
+            for s, kind in sorted(inject.items()):
+                hit = step == s
+                if kind == "nan":
+                    f = jnp.where(hit, jnp.float32(jnp.nan), jnp.float32(1.0))
+                    f_loss = f_loss * f
+                    f_grad = f_grad * f
+                else:
+                    f_grad = f_grad * jnp.where(hit, jnp.float32(1e4),
+                                                jnp.float32(1.0))
+            loss = loss * f_loss
+            grads = jax.tree.map(lambda g: (g * f_grad).astype(g.dtype), grads)
+        gnorm = _global_norm(grads)
+        finite = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+        ema_live = gnorm_ema > 0.0
+        bad = ~finite | (ema_live & (gnorm > spike_factor * gnorm_ema))
+        new_params, new_opt = opt.update(grads, opt_state, params, lr)
+        upd_norm = _global_norm(jax.tree.map(
+            lambda n, o: n.astype(jnp.float32) - o.astype(jnp.float32),
+            new_params, params))
+        if nan_policy in ("skip", "rollback"):
+            # lax.cond, not a per-leaf select: the healthy path then never
+            # reads the pre-step trees (a select pays 2 reads + 1 write per
+            # leaf on EVERY step to guard the rare bad one).
+            new_params, new_opt = jax.lax.cond(
+                bad, lambda: (params, opt_state),
+                lambda: (new_params, new_opt))
+        new_ema = jnp.where(
+            bad, gnorm_ema,
+            jnp.where(ema_live, 0.9 * gnorm_ema + 0.1 * gnorm, gnorm))
+        out = {"loss": loss, "lr": lr, **metrics,
+               "grad_norm": gnorm, "update_norm": upd_norm,
+               "bad": bad.astype(jnp.float32), "gnorm_ema": new_ema}
+        return new_params, new_opt, out
+
+    fn = sentinel_fn if sentinels else step_fn
     donate_argnums = (0, 1) if donate else ()
     if shardings is None:
-        return jax.jit(step_fn, donate_argnums=donate_argnums)
+        return jax.jit(fn, donate_argnums=donate_argnums)
+    r = shardings.replicated
+    extra_in = (r,) if sentinels else ()
     return jax.jit(
-        step_fn,
+        fn,
         in_shardings=(shardings.params, shardings.opt_state, shardings.batch,
-                      shardings.replicated),
-        out_shardings=(shardings.params, shardings.opt_state,
-                       shardings.replicated),
+                      r) + extra_in,
+        out_shardings=(shardings.params, shardings.opt_state, r),
         donate_argnums=donate_argnums)
 
 

@@ -28,6 +28,10 @@
 #                                     # lifecycle — tape/storm containment
 #                                     # sweeps, crash-resume byte parity,
 #                                     # deadline/cancel/shed, torn checkpoints
+#   bash test.sh --train-faults-smoke # fast lane: train-side fault plane —
+#                                     # NaN/spike sentinels, expansion-guard
+#                                     # rollback, preempt-resume byte parity,
+#                                     # async torn checkpoints, hang deadline
 #
 # Test deps are declared in requirements-test.txt (pytest + hypothesis for
 # the pool property fuzz; a seeded fallback generator runs when hypothesis
@@ -74,6 +78,11 @@ fi
 if [[ "${1:-}" == "--faults-smoke" ]]; then
   shift
   set -- tests/test_serving_faults.py -m "not slow" "$@"
+fi
+
+if [[ "${1:-}" == "--train-faults-smoke" ]]; then
+  shift
+  set -- tests/test_train_faults.py -m "not slow" "$@"
 fi
 
 if ! python -c "import hypothesis" 2>/dev/null; then

@@ -51,8 +51,10 @@ def test_fixed_size_training_baseline():
 
 def test_checkpoint_resume_continues_exactly(tmp_path):
     """Kill at step 20, resume, and land at the same depth + finite loss —
-    restart-safety of the progressive schedule."""
-    cfg_t = tcfg(total_steps=30, checkpoint_every=10,
+    restart-safety of the progressive schedule.  History persists through
+    the checkpoint, so the resumed result reports the FULL curve (steps
+    0..29 exactly once), not a fragment starting at the resume point."""
+    cfg_t = tcfg(total_steps=30, checkpoint_every=10, log_every=1,
                  expansions=(ExpansionConfig(at_frac=0.5, target_layers=4,
                                              init="random"),))
     d = str(tmp_path)
@@ -64,8 +66,12 @@ def test_checkpoint_resume_continues_exactly(tmp_path):
     res2 = loop.train(CFG, cfg_t, checkpoint_dir=d, log_fn=lambda *a: None)
     assert res2.final_layers == 4
     assert np.isfinite(res2.history["loss"][-1])
-    # resume started where run 1 stopped — no step < 20 logged
-    assert min(res2.history["step"]) >= 20
+    # full restored curve: every step logged exactly once, and the resume
+    # replayed nothing (the label-=-steps-completed convention)
+    assert res2.history["step"] == list(range(30))
+    # run 1 (total_steps=20) expanded at 0.5*20; the restored history keeps it
+    assert res2.history["expansion_steps"] == [10]
+    assert len(res2.history["loss"]) == 30
 
 
 def test_multi_stage_expansion():
